@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: schedule cache + CSV emission."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "bench_cache.json")
+
+
+def _load_cache() -> dict:
+    try:
+        with open(CACHE_PATH) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def cached(key: str, fn: Callable[[], dict]) -> dict:
+    """Memoize expensive schedule searches across benchmark runs."""
+    cache = _load_cache()
+    if key in cache:
+        return cache[key]
+    value = fn()
+    cache = _load_cache()
+    cache[key] = value
+    os.makedirs(os.path.dirname(CACHE_PATH), exist_ok=True)
+    with open(CACHE_PATH, "w") as f:
+        json.dump(cache, f, indent=1)
+    return value
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The driver's CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out

@@ -1,0 +1,63 @@
+"""Paper Figs. 6-7: co-designed memory hierarchy + blocking.
+
+Fig. 6: optimal (core + memory) vs DianNao-with-optimal-schedule — paper
+reports >=13x energy reduction with an 8MB budget.
+Fig. 7: the energy-vs-area Pareto under SRAM budgets — paper's 1MB point
+gives ~10x at ~6x area.
+"""
+
+from benchmarks.common import cached, emit, timed
+from repro.configs import PAPER_LAYERS
+from repro.core import (diannao_hierarchy, energy_custom, make_objective,
+                        optimize_beam, optimize_exhaustive)
+
+CONVS = ["Conv1", "Conv2", "Conv3", "Conv4", "Conv5"]
+BUDGETS = [128 * 1024, 512 * 1024, 1024 * 1024, 8 * 1024 * 1024]
+
+
+def diannao_optimal_total(layer: str) -> float:
+    from benchmarks.fig5_diannao_energy import one_layer
+    return cached(f"fig5/{layer}", lambda: one_layer(layer))[
+        "optimal"]["total"]
+
+
+def codesign(layer: str, budget: int) -> dict:
+    p = PAPER_LAYERS[layer]
+    obj = make_objective("custom", sram_budget_bytes=budget)
+    res = optimize_beam(p, obj, n_levels=4, beam=6, perturbations=2,
+                        seed=0)[0]
+    return {"total_pj": res.report.total_pj,
+            "mem_pj": res.report.mem_pj,
+            "mac_pj": res.report.mac_pj,
+            "area_mm2": res.report.area_mm2,
+            "schedule": repr(res.string)}
+
+
+def run() -> None:
+    # Fig. 6: 8MB budget vs DianNao-optimal
+    for layer in CONVS:
+        us, r = timed(lambda l=layer: cached(
+            f"fig67/{l}/8M", lambda: codesign(l, 8 * 1024 * 1024)))
+        ref = diannao_optimal_total(layer)
+        emit(f"fig6/{layer}", us,
+             f"codesign8MB reduction {ref / r['total_pj']:.1f}x "
+             f"(area {r['area_mm2']:.1f}mm2)")
+    # Fig. 7: Pareto for Conv1
+    for budget in BUDGETS:
+        us, r = timed(lambda b=budget: cached(
+            f"fig67/Conv1/{b}", lambda: codesign("Conv1", b)))
+        ref = diannao_optimal_total("Conv1")
+        emit(f"fig7/Conv1_{budget//1024}KB", us,
+             f"reduction {ref / r['total_pj']:.1f}x area "
+             f"{r['area_mm2']:.1f}mm2")
+    # Fig. 8: memory:compute ratio on the 8MB design
+    for layer in CONVS:
+        r = cached(f"fig67/{layer}/8M",
+                   lambda l=layer: codesign(l, 8 * 1024 * 1024))
+        emit(f"fig8/{layer}", 0.0,
+             f"mem/mac energy ratio {r['mem_pj'] / r['mac_pj']:.2f} "
+             f"(paper: < 1)")
+
+
+if __name__ == "__main__":
+    run()

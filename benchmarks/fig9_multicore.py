@@ -1,0 +1,33 @@
+"""Paper Fig. 9: multicore scaling of Conv1 under KB-shared (XY) vs
+IB-shared (K) partitioning, for the top-4 single-core schedules."""
+
+from benchmarks.common import cached, emit, timed
+from repro.configs import PAPER_LAYERS
+from repro.core import (evaluate_multicore, make_objective,
+                        optimize_exhaustive)
+
+
+def top4_schedules() -> list[str]:
+    def search():
+        p = PAPER_LAYERS["Conv1"]
+        res = optimize_exhaustive(p, make_objective("custom"), n_levels=2,
+                                  top=4, max_orders=12)
+        return {"schedules": [repr(r.string) for r in res]}
+    return cached("fig9/top4", search)["schedules"]
+
+
+def run() -> None:
+    from repro.core import BlockingString
+    p = PAPER_LAYERS["Conv1"]
+    for si, text in enumerate(top4_schedules(), 1):
+        s = BlockingString.parse(text, p)
+        for scheme in ("K", "XY"):
+            rows = []
+            for cores in (1, 2, 4, 8):
+                us, r = timed(lambda: evaluate_multicore(s, scheme, cores))
+                rows.append(f"{cores}c={r.pj_per_mac:.2f}pJ")
+            emit(f"fig9/sched{si}_{scheme}", us, " ".join(rows))
+
+
+if __name__ == "__main__":
+    run()

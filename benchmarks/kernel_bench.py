@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs oracle + model-predicted
+traffic for the tile choices (analytic; wall-clock on CPU is NOT the TPU
+story, so the derived column reports the model's DRAM-traffic ratio)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import (BlockingString, Dim, Loop, Problem, analyze,
+                        matmul_tiles)
+from repro.kernels import ops, ref
+
+
+def matmul_traffic_ratio(m, n, k) -> float:
+    """Model-predicted HBM traffic under a VMEM-sized on-chip level:
+    optimizer tile vs untiled GEMM (whose working set spills)."""
+    from repro.core import MemLevel, cache_accesses
+    levels = [MemLevel.sram("VMEM", 16 * 1024 * 1024), MemLevel.dram()]
+    p = Problem.gemm(M=m, N_cols=n, K_reduce=k)
+    bm, bk, bn = matmul_tiles(m, n, k, 2)
+    tiled = BlockingString(
+        [Loop(Dim.C, bk), Loop(Dim.X, bm), Loop(Dim.K, bn),
+         Loop(Dim.C, k), Loop(Dim.K, n), Loop(Dim.X, m)], p)
+    naive = BlockingString(
+        [Loop(Dim.C, k), Loop(Dim.K, n), Loop(Dim.X, m)], p)
+    naive_dram = cache_accesses(naive, levels)["DRAM"]
+    tiled_dram = cache_accesses(tiled, levels)["DRAM"]
+    return naive_dram / max(tiled_dram, 1)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # matmul
+    a = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+    out = ops.matmul(a, b, tiles=(64, 128, 128), interpret=True)
+    us, _ = timed(lambda: np.asarray(
+        ops.matmul(a, b, tiles=(64, 128, 128), interpret=True)))
+    ratio = matmul_traffic_ratio(4096, 4096, 4096)
+    emit("kernel/matmul_256x512x256", us,
+         f"model DRAM-traffic reduction (4k GEMM) {ratio:.1f}x")
+    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-3,
+                               atol=1e-3)
+
+    # conv
+    x = jnp.asarray(rng.normal(size=(1, 28, 28, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(3, 3, 32, 64)), jnp.float32)
+    us, out = timed(lambda: np.asarray(
+        ops.conv2d(x, w, tiles=(13, 13, 32, 64), interpret=True)))
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-2,
+                               atol=1e-2)
+    emit("kernel/conv_28x28x32x64", us, "allclose-vs-oracle OK")
+
+    # attention
+    q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    us, out = timed(lambda: np.asarray(
+        ops.attention(q, k, v, tiles=(32, 32), interpret=True)))
+    emit("kernel/flash_attn_128", us, "GQA causal OK")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Full network definitions for the paper's Table 1 accounting."""
+
+from repro.core.loopnest import Problem
+
+
+def alexnet_convs() -> list[Problem]:
+    """AlexNet [23] conv layers (ungrouped variant, 227x227 input)."""
+    return [
+        Problem(X=55, Y=55, C=3, K=96, Fw=11, Fh=11, stride=4),
+        Problem(X=27, Y=27, C=96, K=256, Fw=5, Fh=5),
+        Problem(X=13, Y=13, C=256, K=384, Fw=3, Fh=3),
+        Problem(X=13, Y=13, C=384, K=384, Fw=3, Fh=3),
+        Problem(X=13, Y=13, C=384, K=256, Fw=3, Fh=3),
+    ]
+
+
+def alexnet_fcs() -> list[Problem]:
+    return [
+        Problem.gemm(M=1, N_cols=4096, K_reduce=9216),
+        Problem.gemm(M=1, N_cols=4096, K_reduce=4096),
+        Problem.gemm(M=1, N_cols=1000, K_reduce=4096),
+    ]
+
+
+def _vgg_block(x: int, c_in: int, c_out: int, n: int) -> list[Problem]:
+    out = [Problem(X=x, Y=x, C=c_in, K=c_out, Fw=3, Fh=3)]
+    for _ in range(n - 1):
+        out.append(Problem(X=x, Y=x, C=c_out, K=c_out, Fw=3, Fh=3))
+    return out
+
+
+def vgg_b_convs() -> list[Problem]:
+    """VGGNet-B [35]: 2-2-2-2-2 conv layers."""
+    return (_vgg_block(224, 3, 64, 2) + _vgg_block(112, 64, 128, 2) +
+            _vgg_block(56, 128, 256, 2) + _vgg_block(28, 256, 512, 2) +
+            _vgg_block(14, 512, 512, 2))
+
+
+def vgg_d_convs() -> list[Problem]:
+    """VGGNet-D (VGG-16) [35]: 2-2-3-3-3 conv layers."""
+    return (_vgg_block(224, 3, 64, 2) + _vgg_block(112, 64, 128, 2) +
+            _vgg_block(56, 128, 256, 3) + _vgg_block(28, 256, 512, 3) +
+            _vgg_block(14, 512, 512, 3))
+
+
+def vgg_fcs() -> list[Problem]:
+    return [
+        Problem.gemm(M=1, N_cols=4096, K_reduce=25088),
+        Problem.gemm(M=1, N_cols=4096, K_reduce=4096),
+        Problem.gemm(M=1, N_cols=1000, K_reduce=4096),
+    ]

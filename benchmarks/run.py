@@ -1,0 +1,47 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout).  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig34,roofline]
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (fig34_cache_accesses, fig5_diannao_energy,
+                        fig67_codesign, fig9_multicore, kernel_bench,
+                        roofline, table1_macs_mem)
+
+SUITES = {
+    "table1": table1_macs_mem.run,
+    "fig34": fig34_cache_accesses.run,
+    "fig5": fig5_diannao_energy.run,
+    "fig67": fig67_codesign.run,
+    "fig9": fig9_multicore.run,
+    "kernels": kernel_bench.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            SUITES[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Table 1: computation / memory breakdown of AlexNet & VGGNet."""
+
+from benchmarks import networks
+from benchmarks.common import emit, timed
+
+
+PAPER = {  # (GMACs, MB) as printed in Table 1
+    "AlexNet Convs": (1.9, 2.0),
+    "VGGNet-B Convs": (11.2, 19.0),
+    "VGGNet-D Convs": (15.3, 29.0),
+    "AlexNet FCs": (0.065, 130.0),
+    "VGGNet-B FCs": (0.124, 247.0),
+    "VGGNet-D FCs": (0.124, 247.0),
+}
+
+
+def rows() -> dict[str, tuple[float, float]]:
+    nets = {
+        "AlexNet Convs": networks.alexnet_convs(),
+        "VGGNet-B Convs": networks.vgg_b_convs(),
+        "VGGNet-D Convs": networks.vgg_d_convs(),
+        "AlexNet FCs": networks.alexnet_fcs(),
+        "VGGNet-B FCs": networks.vgg_fcs(),
+        "VGGNet-D FCs": networks.vgg_fcs(),
+    }
+    out = {}
+    for name, layers in nets.items():
+        gmacs = sum(p.macs for p in layers) / 1e9
+        mb = sum(p.weight_elems * p.bytes_per_elem for p in layers) / 1e6
+        out[name] = (gmacs, mb)
+    return out
+
+
+def run() -> None:
+    us, table = timed(rows)
+    for name, (gmacs, mb) in table.items():
+        pg, pm = PAPER[name]
+        emit(f"table1/{name.replace(' ', '_')}", us / len(table),
+             f"GMACs={gmacs:.3f}(paper {pg}) MB={mb:.1f}(paper {pm})")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Reproduce the paper's co-design study on one layer: sweep the SRAM
+budget, watch the optimal hierarchy and blocking change, and print the
+energy/area Pareto (paper Fig. 7 methodology).
+
+    PYTHONPATH=src python examples/schedule_search.py [--layer Conv4]
+"""
+
+import argparse
+
+from repro.configs import PAPER_LAYERS
+from repro.core import make_objective, optimize_beam
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layer", default="Conv4", choices=PAPER_LAYERS)
+    ap.add_argument("--levels", type=int, default=3)
+    args = ap.parse_args()
+    p = PAPER_LAYERS[args.layer]
+    print(f"{args.layer}: {p.macs/1e9:.2f} GMACs")
+    print(f"{'budget':>8s} {'pJ/MAC':>8s} {'area mm2':>9s}  schedule")
+    for budget_kb in (64, 256, 1024, 8192):
+        obj = make_objective("custom",
+                             sram_budget_bytes=budget_kb * 1024)
+        best = optimize_beam(p, obj, n_levels=args.levels, beam=8,
+                             perturbations=3)[0]
+        r = best.report
+        print(f"{budget_kb:6d}KB {r.pj_per_mac:8.3f} {r.area_mm2:9.2f}  "
+              f"{best.string}")
+
+
+if __name__ == "__main__":
+    main()

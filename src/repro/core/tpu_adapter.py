@@ -1,0 +1,204 @@
+"""TPU instantiation of the blocking model (DESIGN.md §3).
+
+The paper's model is hierarchy-agnostic; on TPU v5e the hierarchy is
+HBM (16 GiB, 819 GB/s) -> VMEM (~128 MiB/core) -> VREGs, and the MXU wants
+matmul operands tiled to multiples of (8, 128) sublane x lane (128x128 for
+full systolic utilization).  This module runs the paper's optimizer with
+that hierarchy + alignment constraints and emits:
+
+* ``matmul_tiles``  — (bm, bk, bn) BlockSpec tiles for the blocked-GEMM
+  Pallas kernel (every transformer projection / FC layer);
+* ``conv_tiles``    — (bx, by, bc, bk) tiles for the direct blocked-conv
+  Pallas kernel;
+* ``flash_tiles``   — (block_q, block_kv) for the attention kernel (the
+  K/V tiles play the paper's KB role; the running softmax accumulator is
+  the OB);
+* ``sharding_advice`` — the §3.3 K-vs-XY partitioning rule mapped to
+  tensor-vs-data parallelism for a layer's operand sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.hierarchy import MemLevel
+from repro.core.loopnest import Dim, Problem, divisors
+from repro.core.optimizer import make_objective, optimize_exhaustive
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuTarget:
+    name: str
+    peak_bf16_flops: float
+    hbm_bytes_per_s: float
+    vmem_bytes: int
+    ici_bytes_per_s_per_link: float
+    mxu: tuple[int, int] = (128, 128)
+    sublane: int = 8
+    lane: int = 128
+    hbm_bytes: int = 16 * 1024**3
+
+
+TPU_V5E = TpuTarget(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bytes_per_s=819e9,
+    vmem_bytes=128 * 1024 * 1024,
+    ici_bytes_per_s_per_link=50e9,
+)
+
+
+def _round_to(v: int, mult: int, lo: int, hi: int) -> int:
+    v = max(lo, min(hi, (v // mult) * mult))
+    return v if v >= mult else min(hi, mult)
+
+
+def _pick_tile(extent: int, target: int, mult: int) -> int:
+    """Largest tile <= target that is a multiple of ``mult`` and <= extent;
+    prefers exact divisors of extent to avoid ragged tail blocks."""
+    if extent <= mult:
+        return extent
+    cap = min(target, extent)
+    aligned_divs = [d for d in divisors(extent) if d % mult == 0 and d <= cap]
+    if aligned_divs:
+        return max(aligned_divs)
+    return _round_to(cap, mult, mult, extent)
+
+
+@functools.lru_cache(maxsize=512)
+def matmul_tiles(M: int, N: int, K: int, bytes_per_elem: int = 2,
+                 vmem_budget_bytes: int | None = None,
+                 target: TpuTarget = TPU_V5E) -> tuple[int, int, int]:
+    """(bm, bk, bn) tile for C[M,N] += A[M,K] @ B[K,N] from the paper model.
+
+    The optimizer sees a 2-level hierarchy (VMEM working set, HBM above)
+    and alignment candidates restricted to MXU multiples; the analytical
+    winner is then snapped to hardware alignment.
+    """
+    budget = vmem_budget_bytes or target.vmem_bytes // 8  # leave headroom
+    problem = Problem.gemm(M=M, N_cols=N, K_reduce=K,
+                           bytes_per_elem=bytes_per_elem)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    objective = make_objective("fixed", levels)
+    align = {Dim.X: target.sublane, Dim.K: target.lane, Dim.C: target.lane}
+    try:
+        res = optimize_exhaustive(problem, objective, n_levels=2, top=1,
+                                  align=align)
+        s = res[0].string
+    except Exception:
+        s = None
+    if s is not None:
+        # innermost cumulative extents = level-0 block
+        e = s.extents_below(_level0_end(s))
+        bm, bn, bk = e.X, e.K, e.C
+    else:
+        bm, bn, bk = 256, 256, 512
+    # snap to hardware: lanes on the minor (N, K) dims, sublanes on M
+    bm = _pick_tile(M, max(bm, target.sublane), target.sublane)
+    bn = _pick_tile(N, max(bn, target.lane), target.lane)
+    bk = _pick_tile(K, max(bk, target.lane), target.lane)
+    # enforce VMEM fit: A-tile + B-tile + C-tile (fp32 accum)
+    def fits(bm, bk, bn) -> bool:
+        return (bm * bk + bk * bn) * bytes_per_elem + bm * bn * 4 <= budget
+    while not fits(bm, bk, bn):
+        # shrink the largest contributor
+        if bk * (bm + bn) >= bm * bn and bk > target.lane:
+            bk = max(target.lane, bk // 2)
+        elif bm >= bn and bm > target.sublane:
+            bm = max(target.sublane, bm // 2)
+        elif bn > target.lane:
+            bn = max(target.lane, bn // 2)
+        else:
+            break
+    return bm, bk, bn
+
+
+def _level0_end(s) -> int:
+    """Position after the innermost occurrence of each blockable dim."""
+    seen: set = set()
+    for i, lp in enumerate(s.loops):
+        seen.add(lp.dim)
+        if {Dim.X, Dim.C, Dim.K} <= seen:
+            return i + 1
+    return len(s.loops)
+
+
+@functools.lru_cache(maxsize=256)
+def conv_tiles(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+               bytes_per_elem: int = 2,
+               vmem_budget_bytes: int | None = None,
+               target: TpuTarget = TPU_V5E) -> tuple[int, int, int, int]:
+    """(bx, by, bc, bk) VMEM tile for the direct blocked conv kernel."""
+    budget = vmem_budget_bytes or target.vmem_bytes // 8
+    problem = Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh,
+                      bytes_per_elem=bytes_per_elem)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    objective = make_objective("fixed", levels)
+    align = {Dim.K: target.lane, Dim.C: target.lane}
+    res = optimize_exhaustive(problem, objective, n_levels=2, top=1,
+                              align=align, max_orders=24)
+    e = res[0].string.extents_below(_level0_end(res[0].string))
+    bx = _pick_tile(X, max(e.X, target.sublane), 1)
+    by = _pick_tile(Y, e.Y, 1)
+    bc = _pick_tile(C, max(e.C, min(C, target.lane)),
+                    min(C, target.lane) if C >= target.lane else 1)
+    bk = _pick_tile(K, max(e.K, min(K, target.lane)),
+                    min(K, target.lane) if K >= target.lane else 1)
+
+    def fits(bx, by, bc, bk) -> bool:
+        inp = (bx + Fw - 1) * (by + Fh - 1) * bc * bytes_per_elem
+        wgt = Fw * Fh * bc * bk * bytes_per_elem
+        out = bx * by * bk * 4
+        return inp + wgt + out <= budget
+    while not fits(bx, by, bc, bk):
+        if bx >= by and bx > 8:
+            bx = max(8, bx // 2)
+        elif by > 1:
+            by = max(1, by // 2)
+        elif bk > target.lane:
+            bk = max(target.lane, bk // 2)
+        elif bc > target.lane:
+            bc = max(target.lane, bc // 2)
+        else:
+            break
+    return bx, by, bc, bk
+
+
+@functools.lru_cache(maxsize=256)
+def flash_tiles(seq_q: int, seq_kv: int, head_dim: int,
+                bytes_per_elem: int = 2,
+                vmem_budget_bytes: int | None = None,
+                target: TpuTarget = TPU_V5E) -> tuple[int, int]:
+    """(block_q, block_kv) for the streaming-softmax attention kernel.
+
+    In the paper's vocabulary the KV tile is the kernel buffer (reused by
+    every query block -> big tiles amortize HBM fetches) and the running
+    (m, l, acc) state is the output buffer held across the KV loop.
+    """
+    budget = vmem_budget_bytes or target.vmem_bytes // 8
+    bq = _pick_tile(seq_q, 512, target.sublane)
+    bkv = _pick_tile(seq_kv, 1024, target.lane if seq_kv >= target.lane
+                     else 1)
+
+    def fits(bq, bkv) -> bool:
+        q = bq * head_dim * bytes_per_elem
+        kv = 2 * bkv * head_dim * bytes_per_elem
+        scores = bq * bkv * 4
+        acc = bq * head_dim * 4 + 2 * bq * 4
+        return q + kv + scores + acc <= budget
+    while not fits(bq, bkv):
+        if bkv >= bq and bkv > target.lane:
+            bkv = max(target.lane, bkv // 2)
+        elif bq > target.sublane:
+            bq = max(target.sublane, bq // 2)
+        else:
+            break
+    return bq, bkv
+
+
+def layer_sharding_advice(weight_bytes: int, activation_bytes: int) -> str:
+    """Paper §3.3 / §5.3 rule at mesh scale: shard (partition) the LARGE
+    operand so the small one is the broadcast; sharing the large buffer
+    makes its broadcast free."""
+    return "model" if weight_bytes >= activation_bytes else "data"

@@ -1,0 +1,200 @@
+"""Streaming-softmax (flash) attention Pallas kernel.
+
+In the paper's vocabulary (DESIGN.md §4): the K/V tiles are the kernel
+buffer KB (reused by every query block), the running (m, l, acc) statistics
+are the output buffer OB held VMEM-resident across the KV reduction loop,
+and block_q/block_kv come from the blocking model (``flash_tiles``).
+
+Supports causal masking, sliding-window (local) attention and Gemma-2
+logit soft-capping.  q: (Sq, D), k/v: (Skv, D); heads/batch are vmapped in
+ops.py.  ``kv_offset = Skv - Sq`` aligns decode queries to cache tail.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  logit_cap: float | None, block_q: int, block_kv: int,
+                  n_kv: int, kv_offset: int):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)              # (bq, d)
+    k = k_ref[...].astype(jnp.float32)              # (bkv, d)
+    v = v_ref[...].astype(jnp.float32)              # (bkv, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + kv_offset
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m_new == NEG_INF) against NaN
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF,
+                              m_prev - m_new))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+
+
+def _blocked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: int | None,
+                 logit_cap: float | None, block_kv: int) -> jax.Array:
+    """Streaming-softmax attention in pure jnp (lax.scan over KV chunks,
+    per-chunk checkpointing) — differentiable with O(Sq * block_kv) live
+    memory.  Used as the backward path of the Pallas kernel and as an
+    oracle for long sequences."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    block_kv = min(block_kv, skv)
+    if skv % block_kv:
+        block_kv = skv
+    nb = skv // block_kv
+    scale = d ** -0.5
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(sq) + (skv - sq)
+
+    def chunk(carry, i):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice(k, (i * block_kv, 0), (block_kv, d))
+        vs = jax.lax.dynamic_slice(v, (i * block_kv, 0), (block_kv, d))
+        s = (qf @ ks.astype(jnp.float32).T) * scale
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        kpos = i * block_kv + jnp.arange(block_kv)
+        mask = jnp.ones((sq, block_kv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m <= NEG_INF / 2, 0.0,
+                          jnp.exp(jnp.minimum(m - m_new, 0.0)))
+        l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ vs.astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((sq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((sq, 1), jnp.float32),
+            jnp.zeros((sq, d), jnp.float32))
+    from repro.util import scan_or_unroll
+    (m, l, acc), _ = scan_or_unroll(jax.checkpoint(chunk), init,
+                                    jnp.arange(nb))
+    return (acc / jnp.where(l == 0.0, 1.0, l)).astype(q.dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_differentiable(causal, window, logit_cap, block_q, block_kv,
+                         interpret):
+    """Pallas forward + blocked-jnp backward (recompute, flash-style)."""
+
+    def ref_fn(q, k, v):
+        return _blocked_ref(q, k, v, causal=causal, window=window,
+                            logit_cap=logit_cap, block_kv=block_kv)
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return _flash_forward(q, k, v, causal=causal, window=window,
+                              logit_cap=logit_cap, block_q=block_q,
+                              block_kv=block_kv, interpret=interpret)
+
+    def fwd(q, k, v):
+        return fn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(ref_fn, q, k, v)
+        return vjp(g)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    logit_cap: float | None = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Differentiable flash attention (Pallas fwd, blocked-jnp bwd)."""
+    fn = _make_differentiable(causal, window, logit_cap,
+                              min(block_q, q.shape[0]),
+                              min(block_kv, k.shape[0]), interpret)
+    return fn(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_cap", "block_q", "block_kv", "interpret"))
+def _flash_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int | None = None,
+                   logit_cap: float | None = None,
+                   block_q: int = 128, block_kv: int = 128,
+                   interpret: bool = False) -> jax.Array:
+    sq, d = q.shape
+    skv = k.shape[0]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, \
+        (sq, block_q, skv, block_kv)
+    grid = (sq // block_q, skv // block_kv)
+    scale = d ** -0.5
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            logit_cap=logit_cap, block_q=block_q, block_kv=block_kv,
+            n_kv=grid[1], kv_offset=skv - sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((block_kv, d), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((block_kv, d), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # accumulator (OB)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Blocked-GEMM Pallas kernel with optimizer-derived VMEM tiles.
+
+The tile shape (bm, bk, bn) comes from the paper's blocking model
+instantiated for the TPU hierarchy (``repro.core.tpu_adapter.matmul_tiles``)
+— the HBM->VMEM boundary plays the role of DRAM->SRAM in the paper, and
+fp32 accumulation in VMEM scratch is the paper's output buffer held across
+the C (reduction) loop.
+
+Grid order is (m, n, k) with k minor-most so the accumulator block stays
+VMEM-resident across the whole reduction (the OB rule: allocate the output
+buffer under the C loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_blocked(a: jax.Array, b: jax.Array, *, bm: int, bk: int, bn: int,
+                   interpret: bool = False) -> jax.Array:
+    """C[M,N] = A[M,K] @ B[K,N] tiled (bm, bk, bn).  Dims must divide."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{n})"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

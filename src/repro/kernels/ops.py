@@ -1,0 +1,130 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op (a) derives its VMEM tiles from the paper's blocking model
+(``repro.core.tpu_adapter``), (b) runs the Pallas kernel when shapes tile
+cleanly, and (c) falls back to the jnp oracle otherwise — so models can use
+these ops unconditionally.  ``interpret`` defaults to True off-TPU
+(kernel body executed in Python for correctness validation on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tpu_adapter import conv_tiles, flash_tiles, matmul_tiles
+from repro.kernels import ref
+from repro.kernels.conv2d_blocked import conv2d_block
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul_blocked import matmul_blocked
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a: jax.Array, b: jax.Array,
+           tiles: tuple[int, int, int] | None = None,
+           interpret: bool | None = None) -> jax.Array:
+    """Blocked GEMM with model-derived tiles; oracle fallback."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bk, bn = tiles or matmul_tiles(m, n, k, a.dtype.itemsize)
+    if m % bm or k % bk or n % bn:
+        return ref.matmul_ref(a, b)
+    interpret = default_interpret() if interpret is None else interpret
+    return matmul_blocked(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           tiles: tuple[int, int, int, int] | None = None,
+           interpret: bool | None = None) -> jax.Array:
+    """Direct blocked conv, NHWC x HWIO -> NHWC (VALID padding).
+
+    Level-1 spatial blocking (halo slices from HBM) happens here; level-0
+    channel/kernel blocking happens inside the Pallas kernel.
+    """
+    n, h, wd, c = x.shape
+    fh, fw, _, k = w.shape
+    oh = (h - fh) // stride + 1
+    ow = (wd - fw) // stride + 1
+    bx, by, bc, bk = tiles or conv_tiles(ow, oh, c, k, fw, fh,
+                                         x.dtype.itemsize)
+    if c % bc or k % bk:
+        return ref.conv2d_ref(x, w, stride)
+    interpret = default_interpret() if interpret is None else interpret
+
+    per_image = functools.partial(_conv_one, w=w, stride=stride, bx=bx,
+                                  by=by, bc=bc, bk=bk, oh=oh, ow=ow,
+                                  fh=fh, fw=fw, interpret=interpret)
+    return jax.vmap(per_image)(x)
+
+
+def _conv_one(img, *, w, stride, bx, by, bc, bk, oh, ow, fh, fw, interpret):
+    # level-1 spatial tiles with halo (paper's X1/Y1 loops)
+    if oh % by or ow % bx:
+        by, bx = oh, ow  # ragged spatial: single tile
+    rows = []
+    for ty in range(0, oh, by):
+        cols = []
+        for tx in range(0, ow, bx):
+            tile = jax.lax.dynamic_slice(
+                img, (ty * stride, tx * stride, 0),
+                ((by - 1) * stride + fh, (bx - 1) * stride + fw,
+                 img.shape[2]))
+            cols.append(conv2d_block(tile, w, bc=bc, bk=bk, stride=stride,
+                                     interpret=interpret))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              logit_cap: float | None = None,
+              tiles: tuple[int, int] | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """Multi-head attention with GQA.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq a multiple of Hkv.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    bq, bkv = tiles or flash_tiles(sq, skv, d, q.dtype.itemsize)
+    interpret = default_interpret() if interpret is None else interpret
+    use_kernel = sq % min(bq, sq) == 0 and skv % min(bkv, skv) == 0
+    # roofline analysis variant: exact HLO flops without the Pallas
+    # interpreter's while-loops.  "blocked" keeps flash-style O(S) memory.
+    ref_mode = os.environ.get("REPRO_REF_ATTENTION")
+    if ref_mode:
+        use_kernel = False
+
+    groups = hq // hkv
+    qg = q.reshape(b, sq, hkv, groups, d)
+
+    def one_head(qh, kh, vh):  # (Sq, D), (Skv, D), (Skv, D)
+        if use_kernel:
+            return flash_attention(qh, kh, vh, causal=causal, window=window,
+                                   logit_cap=logit_cap, block_q=bq,
+                                   block_kv=bkv, interpret=interpret)
+        if ref_mode == "blocked":
+            from repro.kernels.flash_attention import _blocked_ref
+            return _blocked_ref(qh, kh, vh, causal=causal, window=window,
+                                logit_cap=logit_cap, block_kv=bkv)
+        return ref.attention_ref(qh, kh, vh, causal=causal,
+                                 logit_cap=logit_cap, window=window)
+
+    def per_kvhead(qh, kh, vh):  # qh: (Sq, G, D); kh, vh: (Skv, D)
+        return jax.vmap(lambda qx: one_head(qx, kh, vh),
+                        in_axes=1, out_axes=1)(qh)       # (Sq, G, D)
+
+    # vmap over kv-heads (inner) and batch (outer)
+    fn = jax.vmap(jax.vmap(per_kvhead))
+    out = fn(qg.transpose(0, 2, 1, 3, 4),   # (B, Hkv, Sq, G, D)
+             k.transpose(0, 2, 1, 3),       # (B, Hkv, Skv, D)
+             v.transpose(0, 2, 1, 3))       # -> (B, Hkv, Sq, G, D)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, sq, hq, d)
+    return out

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[M,N] = A[M,K] @ B[K,N] with fp32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Direct 2-D convolution (cross-correlation, VALID padding).
+
+    x: (N, H, W, C)   w: (Fh, Fw, C, K)   ->   (N, H', W', K)
+    """
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out.astype(x.dtype)
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """The Caffe-style lowering baseline (paper §2.2): explicit im2col
+    followed by one GEMM.  Numerically identical to conv2d_ref; exists so
+    tests can assert the two data layouts agree and so benchmarks can count
+    the replicated lowered-matrix size."""
+    n, h, wd, c = x.shape
+    fh, fw, _, k = w.shape
+    oh = (h - fh) // stride + 1
+    ow = (wd - fw) // stride + 1
+    patches = []
+    for i in range(fh):
+        for j in range(fw):
+            patches.append(
+                jax.lax.slice(x, (0, i, j, 0),
+                              (n, i + oh * stride, j + ow * stride, c),
+                              (1, stride, stride, 1)))
+    lowered = jnp.concatenate(patches, axis=-1)          # (N,OH,OW,Fh*Fw*C)
+    wmat = w.transpose(0, 1, 2, 3).reshape(fh * fw * c, k)
+    out = jnp.einsum("nhwp,pk->nhwk", lowered.astype(jnp.float32),
+                     wmat.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: float | None = None,
+                  logit_cap: float | None = None,
+                  window: int | None = None) -> jax.Array:
+    """Softmax attention oracle.  q,k,v: (Sq, D), (Skv, D), (Skv, D)."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("qd,kd->qk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("qk,kd->qd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Production meshes (DESIGN.md §5).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+pure data parallelism (gradient all-reduce hierarchically scheduled by
+XLA: reduce-scatter intra-pod, all-reduce inter-pod).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): data-only mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The axes that carry the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_divisor(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,177 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape, mesh)`` returns (args_shapes, args_shardings,
+step_kind) for the function the dry-run lowers:
+
+* train_*    -> train_step(params, opt_state, batch)
+* prefill_*  -> prefill(params, tokens [, modality extras])
+* decode_* / long_* -> decode_step(params, token, cache, pos)
+
+Spec translation: model code writes PartitionSpecs with the canonical axis
+names ("data", "model"); here they are rewritten per-mesh — "data" becomes
+("pod", "data") on the multi-pod mesh, or None when the dimension cannot
+be sharded (e.g. batch=1 long-context decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, Shape
+from repro.launch.mesh import batch_divisor, data_axes
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+from repro.models.sharding import translate_spec, translate_tree
+
+
+def axis_mapping(cfg: ModelConfig, shape: Shape, mesh,
+                 parallelism: str = "tp_fsdp") -> dict[str, Any]:
+    """How canonical axes map onto this mesh for this cell.
+
+    ``tp_fsdp`` (default): "model" -> TP axis, "data" -> batch+FSDP.
+    ``fsdp``: no tensor parallelism — the model axis is folded into data
+    (pure ZeRO-3).  For dense models at large token batches this converts
+    the per-layer activation all-reduces (O(tokens x d_model)) into weight
+    all-gathers (O(params)), which is far less collective traffic when
+    tokens/device x d >> params/device — the §Perf optimization for
+    train_4k dense cells.
+    """
+    if parallelism == "fsdp":
+        axes = tuple(mesh.axis_names)  # every axis carries batch + FSDP
+        if shape.global_batch % mesh.size == 0:
+            return {"model": None, "data": axes}
+        return {"model": None, "data": ("data",)
+                if shape.global_batch % mesh.shape.get("data", 1) == 0
+                else None}
+    mapping: dict[str, Any] = {"model": "model"}
+    if shape.global_batch % batch_divisor(mesh) == 0:
+        mapping["data"] = data_axes(mesh)
+    elif shape.global_batch % mesh.shape.get("data", 1) == 0:
+        mapping["data"] = ("data",)
+    else:
+        mapping["data"] = None  # batch too small to shard (long_500k b=1)
+    return mapping
+
+
+def shardings_of(tree_specs: Any, mesh, mapping: dict) -> Any:
+    translated = translate_tree(tree_specs, mapping)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), translated,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shapes(cfg: ModelConfig, shape: Shape) -> tuple[dict, dict]:
+    """(ShapeDtypeStructs, PartitionSpecs) for a training/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    shapes = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    specs = {"tokens": P("data", None), "labels": P("data", None)}
+    if cfg.is_encdec:
+        shapes["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        specs["enc_embeds"] = P("data", None, None)
+    if cfg.prefix_tokens:
+        shapes["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_tokens, cfg.d_model), cfg.dtype)
+        specs["prefix_embeds"] = P("data", None, None)
+    return shapes, specs
+
+
+@dataclasses.dataclass
+class Lowerable:
+    """Everything needed to ``jax.jit(...).lower(...)`` one cell."""
+    fn: Any
+    args_shapes: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh,
+                model_ax: int | None = None,
+                parallelism: str = "tp_fsdp") -> Lowerable:
+    shape = SHAPES[shape_name]
+    if parallelism == "fsdp":
+        model_ax = 1  # no TP: build specs with the model axis collapsed
+    else:
+        model_ax = model_ax or mesh.shape.get("model", 1)
+    mapping = axis_mapping(cfg, shape, mesh, parallelism)
+
+    pspecs = T.param_specs(cfg, model_ax)
+    pshapes = T.param_shapes(cfg, model_ax)
+    pshard = shardings_of(pspecs, mesh, mapping)
+
+    if shape.kind == "train":
+        from repro.train.loop import TrainConfig, make_train_step
+        ostate_specs = adamw.state_specs(pspecs)
+        oshapes = {
+            "mu": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                pshapes),
+            "nu": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                pshapes),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        oshard = shardings_of(ostate_specs, mesh, mapping)
+        bshapes, bspecs = batch_shapes(cfg, shape)
+        bshard = shardings_of(bspecs, mesh, mapping)
+        step = make_train_step(cfg, TrainConfig())
+        return Lowerable(
+            fn=step,
+            args_shapes=(pshapes, oshapes, bshapes),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            kind="train")
+
+    if shape.kind == "prefill":
+        bshapes, bspecs = batch_shapes(cfg, shape)
+        bshard = shardings_of(bspecs, mesh, mapping)
+        max_seq = shape.seq_len + cfg.prefix_tokens  # VLM prefix included
+
+        def prefill_fn(params, batch):
+            return T.prefill(cfg, params, batch["tokens"], max_seq,
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             enc_embeds=batch.get("enc_embeds"))
+
+        cspecs = T.cache_specs(cfg, shape.global_batch, max_seq,
+                               model_ax, cfg.encoder_seq)
+        cshard = shardings_of(cspecs, mesh, mapping)
+        return Lowerable(
+            fn=prefill_fn,
+            args_shapes=(pshapes, bshapes),
+            in_shardings=(pshard, bshard),
+            out_shardings=(None, cshard),
+            kind="prefill")
+
+    # decode: one new token against a seq_len KV cache
+    b = shape.global_batch
+    cshapes = T.cache_shapes(cfg, b, shape.seq_len, model_ax,
+                             cfg.encoder_seq)
+    cspecs = T.cache_specs(cfg, b, shape.seq_len, model_ax,
+                           cfg.encoder_seq)
+    cshard = shardings_of(cspecs, mesh, mapping)
+    tok_shape = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_shard = shardings_of(P("data"), mesh, mapping)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_shard = shardings_of(P(), mesh, mapping)
+
+    def decode_fn(params, token, cache, pos):
+        return T.decode_step(cfg, params, token, cache, pos)
+
+    return Lowerable(
+        fn=decode_fn,
+        args_shapes=(pshapes, tok_shape, cshapes, pos_shape),
+        in_shardings=(pshard, tok_shard, cshard, pos_shard),
+        out_shardings=(None, cshard),
+        kind="decode")

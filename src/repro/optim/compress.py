@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback (DESIGN.md §5).
+
+At multi-pod scale the inter-pod gradient all-reduce is the dominant
+collective; quantizing gradients to int8 (per-tensor scale) cuts that
+traffic 4x (bf16->int8 x2, plus the error-feedback residual lets the
+optimizer tolerate the quantization).  The compressed representative is
+applied *around* the pod-axis reduction: compress -> psum -> decompress.
+Off-mesh this is a pure (de)quantization round-trip, used by tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, residual: Any | None = None
+                  ) -> tuple[Any, Any]:
+    """Quantize a gradient pytree with error feedback.
+
+    Returns (quantized_grads_as_f32, new_residual).  The caller reduces the
+    quantized values; the residual (quantization error) is added to the
+    NEXT step's gradients so no signal is permanently lost.
+    """
+    if residual is None:
+        residual = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        total = g.astype(jnp.float32) + r
+        q, scale = compress(total)
+        deq = decompress(q, scale)
+        return deq, total - deq
+
+    pairs = jax.tree.map(one, grads, residual)
+    deq = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_res

@@ -1,0 +1,161 @@
+"""Fault-tolerant checkpointing: sharded-tree save/restore with atomic
+commit, content hashing and automatic latest-valid resolution.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json (tree structure +
+sha256 of the array payload).  A checkpoint only becomes visible once its
+manifest is written (write-tmp + rename = atomic on POSIX), so a crash
+mid-save can never produce a checkpoint that ``latest_valid`` would pick.
+Restore verifies the hash and falls back to the previous checkpoint on
+corruption — restart-after-node-failure never sees torn state.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":  # ml_dtypes (bf16): store as f32
+            arr = arr.astype(np.float32)
+        out.append((key, arr))
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         keep: int = 3) -> str:
+    """Synchronous atomic save; prunes old checkpoints beyond ``keep``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    pairs, _ = _flatten(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **{k: v for k, v in pairs})
+    payload = buf.getvalue()
+    digest = hashlib.sha256(payload).hexdigest()
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        f.write(payload)
+    manifest = {"step": step, "sha256": digest,
+                "keys": [k for k, _ in pairs],
+                "dtypes": [str(v.dtype) for _, v in pairs],
+                "shapes": [list(v.shape) for _, v in pairs]}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _prune(ckpt_dir, keep)
+    return final
+
+
+_async_thread: threading.Thread | None = None
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> None:
+    """Double-buffered async save: device->host copy happens now, disk IO
+    on a background thread (training continues)."""
+    global _async_thread
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    if _async_thread is not None:
+        _async_thread.join()
+    _async_thread = threading.Thread(
+        target=save, args=(ckpt_dir, step, host_tree, keep), daemon=True)
+    _async_thread.start()
+
+
+def wait_async() -> None:
+    global _async_thread
+    if _async_thread is not None:
+        _async_thread.join()
+        _async_thread = None
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name,
+                                           "manifest.json")):
+                out.append(int(name[5:]))
+    return out
+
+
+def _verify(path: str) -> bool:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with open(os.path.join(path, "arrays.npz"), "rb") as f:
+            payload = f.read()
+        return hashlib.sha256(payload).hexdigest() == manifest["sha256"]
+    except (OSError, json.JSONDecodeError, KeyError):
+        return False
+
+
+def latest_valid(ckpt_dir: str) -> int | None:
+    """Newest checkpoint that passes hash verification."""
+    for s in sorted(_list_steps(ckpt_dir), reverse=True):
+        if _verify(os.path.join(ckpt_dir, f"step_{s:08d}")):
+            return s
+    return None
+
+
+def restore(ckpt_dir: str, template: Any, step: int | None = None) -> \
+        tuple[Any, int]:
+    """Restore into the structure of ``template``.  ``step=None`` -> newest
+    valid.  Arrays whose shape changed (elastic re-slice) are zero-padded /
+    truncated along each axis — see launch/elastic.py."""
+    if step is None:
+        step = latest_valid(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if not _verify(path):
+        raise IOError(f"checkpoint {path} failed hash verification")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(
+        template)
+    leaves = []
+    for p, tmpl in leaves_with_path:
+        key = jax.tree_util.keystr(p)
+        tmpl = np.asarray(tmpl)
+        arr = data[key]
+        if arr.shape != tmpl.shape:
+            arr = _reshape_like(arr, tmpl.shape)
+        leaves.append(arr.astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def _reshape_like(arr: np.ndarray, shape: tuple[int, ...]) -> np.ndarray:
+    """Pad/crop each axis (elastic mesh re-slice support)."""
+    if arr.ndim != len(shape):
+        return np.zeros(shape, arr.dtype)
+    slices = tuple(slice(0, min(a, b)) for a, b in zip(arr.shape, shape))
+    out = np.zeros(shape, arr.dtype)
+    out[slices] = arr[slices]
+    return out

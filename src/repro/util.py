@@ -1,0 +1,36 @@
+"""Shared helpers (no jax-device side effects at import)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_or_unroll(f, init, xs, length: int | None = None):
+    """lax.scan, or an unrolled python loop when REPRO_UNROLL_SCAN=1.
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, so the roofline pass (launch/dryrun.py "analysis variant")
+    lowers with unrolled loops to obtain true HLO FLOPs/bytes; the
+    deployable variant keeps lax.scan for fast compiles.
+    """
+    if os.environ.get("REPRO_UNROLL_SCAN") != "1":
+        return jax.lax.scan(f, init, xs, length=length)
+    if xs is None:
+        n = length
+        slice_x = lambda i: None
+    else:
+        n = jax.tree.leaves(xs)[0].shape[0]
+        slice_x = lambda i: jax.tree.map(lambda a: a[i], xs)
+    carry = init
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, slice_x(i))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,120 @@
+"""Unit tests for the analytical blocking model (paper §3)."""
+
+import math
+
+import pytest
+
+from repro.core import (BlockingString, Dim, Loop, Problem, analyze,
+                        energy_custom, energy_fixed, diannao_hierarchy,
+                        xeon_hierarchy, place_buffers, table2_refetch_rate,
+                        access_energy_pj, Operand, optimize_exhaustive,
+                        make_objective, cache_accesses)
+from repro.core.validate import simulate_fills
+
+SMALL = Problem(X=4, Y=4, C=4, K=8, Fw=3, Fh=3)
+
+
+def test_parse_roundtrip():
+    s = BlockingString.parse("Fw3 Fh3 X2 Y2 C2 K2 X4 Y4 C4 K8", SMALL)
+    assert repr(s) == "Fw3 Fh3 X2 Y2 C2 K2 X4 Y4 C4 K8"
+    assert s.total_iterations() == SMALL.macs // 1
+
+
+def test_validation_rejects_partial_coverage():
+    with pytest.raises(ValueError):
+        BlockingString.parse("Fw3 Fh3 X4 Y4 C4 K4", SMALL)  # K only to 4
+
+
+def test_validation_rejects_non_multiple():
+    with pytest.raises(ValueError):
+        BlockingString.parse("Fw3 Fh3 X3 Y4 C4 K8 X4", SMALL)
+
+
+def test_buffer_placement_rules():
+    s = BlockingString.parse("Fw3 Fh3 X2 Y2 C2 K2 X4 Y4 C4 K8", SMALL)
+    bufs = {b.name: b for b in place_buffers(s)}
+    # K2 loop (pos 5) must have placed an input buffer below it
+    assert any(b.operand == Operand.INPUT and b.pos == 5
+               for b in bufs.values())
+    # C2 loop (pos 4) -> output buffer
+    assert any(b.operand == Operand.OUTPUT and b.pos == 4
+               for b in bufs.values())
+    # X4 loop (pos 6) -> kernel buffer
+    assert any(b.operand == Operand.WEIGHT and b.pos == 6
+               for b in bufs.values())
+
+
+def test_table2_kb_refetch_rate():
+    # KB refetch at an X loop = X_i / X_{i-1} (paper Table 2)
+    s = BlockingString.parse("Fw3 Fh3 X2 Y4 C4 K8 X4", SMALL)
+    rr = table2_refetch_rate(s, 6, Operand.WEIGHT)
+    assert rr == 4 / 2
+
+
+def test_table2_ob_refetch_rate():
+    s = BlockingString.parse("Fw3 Fh3 X4 Y4 C2 K8 C4", SMALL)
+    rr = table2_refetch_rate(s, 6, Operand.OUTPUT)
+    assert rr == 2 * 4 / 2
+
+
+@pytest.mark.parametrize("text,problem", [
+    ("Fw3 Fh3 X2 Y2 C2 K2 X4 Y4 C4 K8", SMALL),
+    ("X2 C2 K2 Fw3 Fh3 Y4 X4 C4 K8", SMALL),
+    ("Fw3 Fh3 K8 C4 Y4 X4", SMALL),
+    ("C2 X3 K2 C4 X6 K4 N2",
+     Problem(X=6, Y=1, C=4, K=4, Fw=1, Fh=1, N=2)),
+    ("Fw2 K2 Fh2 C2 Y2 X2 K4 C4 X4 Y4 K8",
+     Problem(X=4, Y=4, C=4, K=8, Fw=2, Fh=2)),
+])
+def test_access_model_matches_simulation(text, problem):
+    """The closed-form access counts must equal observed eviction events."""
+    s = BlockingString.parse(text, problem)
+    rep = analyze(s)
+    sim = simulate_fills(s)
+    for bt in rep.per_buffer:
+        if bt.buffer.pos < 0:
+            continue
+        sf, sw = sim[bt.buffer.name]
+        assert sf == bt.fills, (bt.buffer.name, sf, bt.fills)
+        assert sw == bt.writebacks, (bt.buffer.name, sw, bt.writebacks)
+
+
+def test_dram_accesses_at_least_compulsory():
+    """DRAM traffic can never go below one visit per element."""
+    s = BlockingString.parse("Fw3 Fh3 X4 Y4 C4 K8", SMALL)
+    rep = analyze(s)
+    assert rep.dram_accesses_by_operand[Operand.WEIGHT] >= \
+        SMALL.weight_elems
+    assert rep.dram_accesses_by_operand[Operand.OUTPUT] >= \
+        SMALL.output_elems
+
+
+def test_energy_table_monotone_in_size():
+    sizes = [512, 2**10, 2**13, 2**17, 2**20, 2**23]
+    es = [access_energy_pj(s) for s in sizes]
+    assert all(a <= b * 1.0001 for a, b in zip(es, es[1:])), es
+
+
+def test_energy_dram_plateau():
+    assert access_energy_pj(64 * 1024 * 1024) == 320.0
+
+
+def test_optimizer_beats_naive_schedule():
+    p = Problem(X=16, Y=16, C=16, K=32, Fw=3, Fh=3)
+    naive = BlockingString.parse("Fw3 Fh3 X16 Y16 C16 K32", p)
+    naive_e = energy_custom(naive).total_pj
+    best = optimize_exhaustive(p, make_objective("custom"), n_levels=2,
+                               top=1, max_orders=8)[0]
+    assert best.report.total_pj <= naive_e
+
+
+def test_fixed_hierarchy_packing():
+    s = BlockingString.parse("Fw3 Fh3 X2 Y2 C2 K2 X4 Y4 C4 K8", SMALL)
+    counts = cache_accesses(s, xeon_hierarchy())
+    assert counts["L1"] > counts["L2"] >= 0
+    assert counts["DRAM"] > 0
+
+
+def test_diannao_hierarchy_shape():
+    levels = diannao_hierarchy()
+    assert [l.name for l in levels] == ["IBuf", "KBuf", "OBuf", "DRAM"]

@@ -1,0 +1,157 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import _blocked_ref, flash_attention
+from repro.kernels.matmul_blocked import matmul_blocked
+from repro.kernels.conv2d_blocked import conv2d_block
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-4),
+       jnp.bfloat16: dict(rtol=8e-2, atol=8e-2)}
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (64, 64, 64, 32, 64, 32),
+    (128, 256, 64, 64, 128, 64),
+    (256, 128, 512, 8, 128, 256),
+    (8, 128, 128, 8, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_blocked(m, k, n, bm, bk, bn, dtype):
+    a, b = rand((m, k), dtype), rand((k, n), dtype)
+    out = matmul_blocked(a, b, bm=bm, bk=bk, bn=bn, interpret=True)
+    expect = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("h,w,c,k,fh,fw,bc,bk,stride", [
+    (8, 8, 4, 8, 3, 3, 4, 8, 1),
+    (12, 10, 8, 16, 3, 3, 4, 8, 1),
+    (9, 9, 2, 4, 2, 2, 2, 4, 1),
+    (14, 14, 4, 8, 3, 3, 2, 4, 2),
+    (8, 8, 4, 8, 1, 1, 4, 8, 1),   # 1x1 conv == GEMM
+])
+def test_conv2d_block(h, w, c, k, fh, fw, bc, bk, stride):
+    x = rand((h, w, c))
+    wgt = rand((fh, fw, c, k), scale=0.5)
+    out = conv2d_block(x, wgt, bc=bc, bk=bk, stride=stride, interpret=True)
+    expect = ref.conv2d_ref(x[None], wgt, stride)[0]
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-4)
+
+
+def test_conv2d_spatial_tiling_with_halo():
+    """ops.conv2d tiles space outside the kernel — halo slicing must agree
+    with the oracle at tile boundaries."""
+    x = rand((2, 20, 20, 4))
+    w = rand((3, 3, 4, 8), scale=0.5)
+    out = ops.conv2d(x, w, tiles=(6, 6, 4, 8), interpret=True)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_im2col_equals_direct():
+    """The Caffe-style lowering oracle must agree with direct conv (the
+    paper's premise: same math, different memory behaviour)."""
+    x = rand((2, 10, 10, 3))
+    w = rand((4, 4, 3, 5))
+    np.testing.assert_allclose(ref.conv2d_im2col(x, w),
+                               ref.conv2d_ref(x, w), rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("sq,skv,d,bq,bkv", [
+    (32, 32, 16, 8, 8),
+    (64, 64, 32, 16, 32),
+    (16, 64, 16, 16, 16),   # decode-ish: fewer queries than keys
+    (1, 32, 16, 1, 8),      # single-token decode
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(sq, skv, d, bq, bkv, causal):
+    q, k, v = rand((sq, d)), rand((skv, d)), rand((skv, d))
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_kv=bkv,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [8, 16])
+def test_flash_attention_window(window):
+    q, k, v = rand((32, 16)), rand((32, 16)), rand((32, 16))
+    out = flash_attention(q, k, v, window=window, block_q=8, block_kv=8,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-4)
+
+
+def test_flash_attention_softcap():
+    q, k, v = rand((32, 16)), rand((32, 16)), rand((32, 16))
+    out = flash_attention(q, k, v, logit_cap=30.0, block_q=8, block_kv=8,
+                          interpret=True)
+    expect = ref.attention_ref(q, k, v, logit_cap=30.0)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-4)
+
+
+def test_flash_attention_grad_matches_ref():
+    q, k, v = rand((16, 8)), rand((16, 8)), rand((16, 8))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, block_q=8, block_kv=8,
+                                       interpret=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+def test_blocked_ref_long_context():
+    """The O(S) streaming oracle agrees on an uneven tail-block case."""
+    q, k, v = rand((8, 16)), rand((128, 16)), rand((128, 16))
+    out = _blocked_ref(q, k, v, causal=True, window=None, logit_cap=None,
+                       block_kv=32)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-4)
+
+
+def test_ops_attention_gqa():
+    q = rand((2, 32, 8, 16))
+    k = rand((2, 32, 2, 16))
+    v = rand((2, 32, 2, 16))
+    out = ops.attention(q, k, v, tiles=(8, 8), interpret=True)
+    for bi in range(2):
+        for h in range(8):
+            expect = ref.attention_ref(q[bi, :, h], k[bi, :, h // 4],
+                                       v[bi, :, h // 4])
+            np.testing.assert_allclose(out[bi, :, h], expect,
+                                       rtol=2e-3, atol=3e-4)
+
+
+def test_matmul_tiles_derived_from_model():
+    from repro.core import matmul_tiles
+    bm, bk, bn = matmul_tiles(4096, 4096, 4096, 2)
+    assert bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+    # VMEM fit (the default budget is vmem/8 = 16 MiB)
+    assert (bm * bk + bk * bn) * 2 + bm * bn * 4 <= 16 * 1024 * 1024
+
+
+def test_conv_tiles_fit_vmem():
+    from repro.core import conv_tiles
+    bx, by, bc, bk = conv_tiles(56, 56, 128, 256, 3, 3, 2)
+    inp = (bx + 2) * (by + 2) * bc * 2
+    wgt = 9 * bc * bk * 2
+    out = bx * by * bk * 4
+    assert inp + wgt + out <= 16 * 1024 * 1024

@@ -1,0 +1,73 @@
+"""Paper §3.3 multicore model + §2.2/§5.1 GEMM-lowering comparison."""
+
+import pytest
+
+from repro.configs import PAPER_LAYERS
+from repro.core import (BlockingString, Problem, best_scheme,
+                        evaluate_multicore, make_objective,
+                        optimize_exhaustive, xeon_hierarchy,
+                        direct_blocking_accesses, gemm_lowering_accesses)
+
+
+@pytest.fixture(scope="module")
+def conv1_schedule():
+    p = PAPER_LAYERS["Conv1"]
+    res = optimize_exhaustive(p, make_objective("custom"), n_levels=2,
+                              top=1, max_orders=6)
+    return res[0].string
+
+
+def test_multicore_energy_decreases_with_cores(conv1_schedule):
+    """Fig. 9: with the right unrolling, energy/op falls as cores grow."""
+    reports = [best_scheme(conv1_schedule, c) for c in (1, 2, 4, 8)]
+    pj = [r.pj_per_mac for r in reports]
+    assert pj[3] <= pj[0] * 1.05, pj
+
+
+def test_schemes_agree_at_one_core(conv1_schedule):
+    """With a single core there is no partition/broadcast: both schemes
+    must evaluate to the same energy."""
+    k1 = evaluate_multicore(conv1_schedule, "K", 1)
+    xy1 = evaluate_multicore(conv1_schedule, "XY", 1)
+    assert abs(k1.total_pj - xy1.total_pj) / k1.total_pj < 1e-9
+
+
+def test_best_scheme_is_min_and_broadcast_grows_with_shared_traffic(
+        conv1_schedule):
+    """best_scheme returns the cheaper partitioning, and the broadcast
+    surcharge applies to the SHARED buffer's served reads only (paper
+    §3.3/§5.3: the partitioned buffers get cheaper, the shared one pays
+    the die-wide broadcast)."""
+    k8 = evaluate_multicore(conv1_schedule, "K", 8)
+    xy8 = evaluate_multicore(conv1_schedule, "XY", 8)
+    best = best_scheme(conv1_schedule, 8)
+    assert best.total_pj == min(k8.total_pj, xy8.total_pj)
+    assert k8.broadcast_pj > 0 and xy8.broadcast_pj > 0
+
+
+def test_partitioning_conserves_work(conv1_schedule):
+    """Per-core problem x cores == whole problem (no work lost)."""
+    for scheme in ("K", "XY"):
+        r = evaluate_multicore(conv1_schedule, scheme, 4)
+        assert r.string.problem.macs * 4 == conv1_schedule.problem.macs
+
+
+@pytest.mark.parametrize("layer", ["Conv3", "Conv4", "Conv5"])
+def test_direct_blocking_beats_gemm_lowering(layer):
+    """Figs. 3-4: direct blocking does fewer L2+L3 accesses than
+    im2col+GEMM for every conv benchmark (gap shrinks Conv1->Conv5)."""
+    p = PAPER_LAYERS[layer]
+    levels = xeon_hierarchy()
+    ours = direct_blocking_accesses(p, levels)
+    for quality in ("mkl", "atlas"):
+        theirs = gemm_lowering_accesses(p, levels, quality).cache_counts
+        assert theirs["L2"] + theirs["L3"] > ours["L2"] + ours["L3"], \
+            (layer, quality, ours, theirs)
+
+
+def test_lowering_replicates_data():
+    """im2col replication factor == Fw*Fh (the waste GEMM pays)."""
+    p = PAPER_LAYERS["Conv4"]
+    rep = gemm_lowering_accesses(p, xeon_hierarchy())
+    assert rep.lowering_write_elems == p.X * p.Y * p.C * p.Fw * p.Fh
+    assert rep.gemm.C == p.C * p.Fw * p.Fh

@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) for the blocking model invariants."""
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BlockingString, Dim, Loop, Problem, analyze,
+                        energy_custom, Operand, place_buffers)
+from repro.core.validate import simulate_fills
+
+
+@st.composite
+def small_problem(draw):
+    return Problem(
+        X=draw(st.sampled_from([2, 3, 4, 6])),
+        Y=draw(st.sampled_from([1, 2, 4])),
+        C=draw(st.sampled_from([1, 2, 4])),
+        K=draw(st.sampled_from([2, 4, 8])),
+        Fw=draw(st.sampled_from([1, 2, 3])),
+        Fh=draw(st.sampled_from([1, 2])),
+    )
+
+
+@st.composite
+def blocking_string(draw, problem: Problem):
+    """A random VALID multi-level blocking of the problem."""
+    import random
+    dims = [Dim.X, Dim.Y, Dim.C, Dim.K, Dim.FW, Dim.FH]
+    loops = []
+    cur = {d: 1 for d in dims}
+    n_rounds = draw(st.integers(1, 3))
+    rng = random.Random(draw(st.integers(0, 10_000)))
+    for _ in range(n_rounds):
+        order = dims[:]
+        rng.shuffle(order)
+        for d in order:
+            full = problem.full_extent(d)
+            divs = [v for v in range(cur[d], full + 1)
+                    if full % v == 0 and v % cur[d] == 0]
+            ext = rng.choice(divs)
+            if ext > cur[d]:
+                loops.append(Loop(d, ext))
+                cur[d] = ext
+    # close every dim to full extent
+    for d in dims:
+        if cur[d] != problem.full_extent(d):
+            loops.append(Loop(d, problem.full_extent(d)))
+    return BlockingString(loops, problem)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_model_equals_simulation(data):
+    """INVARIANT: closed-form fill counts == simulated eviction events,
+    for arbitrary valid loop orders and split sizes."""
+    p = data.draw(small_problem())
+    hypothesis.assume(p.macs <= 40_000)
+    s = data.draw(blocking_string(p))
+    rep = analyze(s)
+    sim = simulate_fills(s)
+    for bt in rep.per_buffer:
+        if bt.buffer.pos < 0:
+            continue
+        sf, sw = sim[bt.buffer.name]
+        assert sf == bt.fills, (repr(s), bt.buffer.name, sf, bt.fills)
+        assert sw == bt.writebacks, (repr(s), bt.buffer.name, sw,
+                                     bt.writebacks)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_buffer_sizes_nested(data):
+    """INVARIANT: per-operand buffer sizes are strictly increasing
+    inner -> outer (placement only materializes strictly-larger buffers)."""
+    p = data.draw(small_problem())
+    s = data.draw(blocking_string(p))
+    last: dict = {}
+    for b in place_buffers(s):
+        if b.pos < 0:
+            continue
+        if b.operand in last:
+            assert b.size_elems > last[b.operand]
+        last[b.operand] = b.size_elems
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_compulsory_traffic_bound(data):
+    """INVARIANT: DRAM traffic >= one visit per element of each operand
+    (weights/outputs; inputs can go below only if fully bufferable...
+    they can't: outermost input buffer <= problem, so >= once)."""
+    p = data.draw(small_problem())
+    s = data.draw(blocking_string(p))
+    rep = analyze(s)
+    assert rep.dram_accesses_by_operand[Operand.WEIGHT] >= p.weight_elems
+    assert rep.dram_accesses_by_operand[Operand.OUTPUT] >= p.output_elems
+    assert rep.dram_accesses_by_operand[Operand.INPUT] >= \
+        p.X * p.Y * p.C  # at least the non-halo interior once
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_energy_positive_and_finite(data):
+    p = data.draw(small_problem())
+    s = data.draw(blocking_string(p))
+    rep = energy_custom(s)
+    assert rep.total_pj > 0
+    assert rep.mem_pj >= 0
+    assert all(v >= 0 for v in rep.per_buffer_pj.values())
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_gemm_degenerate_case(data):
+    """FC layers (Fw=Fh=Y=1): input footprint has no halo, and the model
+    reduces to plain matmul blocking."""
+    M = data.draw(st.sampled_from([4, 8]))
+    N = data.draw(st.sampled_from([4, 8]))
+    K = data.draw(st.sampled_from([4, 16]))
+    p = Problem.gemm(M=M, N_cols=N, K_reduce=K)
+    s = data.draw(blocking_string(p))
+    rep = analyze(s)
+    sim = simulate_fills(s)
+    for bt in rep.per_buffer:
+        if bt.buffer.pos < 0:
+            continue
+        assert sim[bt.buffer.name][0] == bt.fills
