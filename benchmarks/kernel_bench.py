@@ -1,14 +1,15 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs oracle + model-predicted
 traffic for the tile choices (analytic; wall-clock on CPU is NOT the TPU
-story, so the derived column reports the model's DRAM-traffic ratio)."""
+story, so the derived column reports the model's DRAM-traffic ratio),
+plus autotuned-vs-hardcoded tile comparisons on the same access model."""
 
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
-from repro.core import (BlockingString, Dim, Loop, Problem, analyze,
-                        matmul_tiles)
+from repro.core import (BlockingString, Dim, Loop, Problem, matmul_tiles)
 from repro.kernels import ops, ref
+from repro.tune import OpSpec, best_schedule, predicted_dram_accesses
 
 
 def matmul_traffic_ratio(m, n, k) -> float:
@@ -28,28 +29,63 @@ def matmul_traffic_ratio(m, n, k) -> float:
     return naive_dram / max(tiled_dram, 1)
 
 
+# hardcoded tiles this benchmark shipped with before the autotuner; kept
+# as the baseline the tuned schedules are compared against
+DEFAULT_MATMUL_TILES = (64, 128, 128)
+DEFAULT_CONV_TILES = (13, 13, 32, 64)
+
+
+def tuned_vs_default(spec: OpSpec, default_tiles) -> tuple[tuple, str]:
+    """Tuned tiles + a derived-column string comparing DRAM accesses."""
+    sched = best_schedule(spec.op, spec.dims, spec.dtype,
+                          stride=spec.stride)
+    tuned = predicted_dram_accesses(spec, sched.tiles)
+    default = predicted_dram_accesses(spec, default_tiles)
+    verdict = "BEATS" if tuned < default else \
+        "matches" if tuned == default else "LOSES-TO"
+    return sched.tiles, (f"tuned {sched.tiles} {tuned:.3e} {verdict} "
+                         f"default {default_tiles} {default:.3e} "
+                         f"DRAM accesses ({sched.source})")
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
-    # matmul
+    # matmul: hardcoded-default tiles vs the autotuner's pick
     a = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
-    out = ops.matmul(a, b, tiles=(64, 128, 128), interpret=True)
+    out = ops.matmul(a, b, tiles=DEFAULT_MATMUL_TILES, interpret=True)
     us, _ = timed(lambda: np.asarray(
-        ops.matmul(a, b, tiles=(64, 128, 128), interpret=True)))
+        ops.matmul(a, b, tiles=DEFAULT_MATMUL_TILES, interpret=True)))
     ratio = matmul_traffic_ratio(4096, 4096, 4096)
     emit("kernel/matmul_256x512x256", us,
          f"model DRAM-traffic reduction (4k GEMM) {ratio:.1f}x")
     np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-3,
                                atol=1e-3)
 
+    mm_spec = OpSpec("matmul", (256, 256, 512), "float32")
+    mm_tiles, derived = tuned_vs_default(mm_spec, DEFAULT_MATMUL_TILES)
+    us, tuned_out = timed(lambda: np.asarray(
+        ops.matmul(a, b, tiles=mm_tiles, interpret=True)))
+    np.testing.assert_allclose(tuned_out, ref.matmul_ref(a, b), rtol=1e-3,
+                               atol=1e-3)
+    emit("kernel/matmul_256x512x256_tuned", us, derived)
+
     # conv
     x = jnp.asarray(rng.normal(size=(1, 28, 28, 32)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(3, 3, 32, 64)), jnp.float32)
     us, out = timed(lambda: np.asarray(
-        ops.conv2d(x, w, tiles=(13, 13, 32, 64), interpret=True)))
+        ops.conv2d(x, w, tiles=DEFAULT_CONV_TILES, interpret=True)))
     np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-2,
                                atol=1e-2)
     emit("kernel/conv_28x28x32x64", us, "allclose-vs-oracle OK")
+
+    conv_spec = OpSpec("conv2d", (26, 26, 32, 64, 3, 3), "float32")
+    cv_tiles, derived = tuned_vs_default(conv_spec, DEFAULT_CONV_TILES)
+    us, tuned_out = timed(lambda: np.asarray(
+        ops.conv2d(x, w, tiles=cv_tiles, interpret=True)))
+    np.testing.assert_allclose(tuned_out, ref.conv2d_ref(x, w), rtol=1e-2,
+                               atol=1e-2)
+    emit("kernel/conv_28x28x32x64_tuned", us, derived)
 
     # attention
     q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)

@@ -1,8 +1,18 @@
-"""Reproduce the paper's co-design study on one layer: sweep the SRAM
-budget, watch the optimal hierarchy and blocking change, and print the
+"""Schedule search, two ways.
+
+Default (the paper's co-design study): sweep the SRAM budget on one
+layer, watch the optimal hierarchy and blocking change, and print the
 energy/area Pareto (paper Fig. 7 methodology).
 
     PYTHONPATH=src python examples/schedule_search.py [--layer Conv4]
+
+``--tpu``: run the same analytical model through the Pallas schedule
+autotuner instead — lower the layer to kernel tile candidates, rank them
+by predicted HBM traffic, optionally time the top few (``--measure``,
+interpret mode off-TPU), and persist the winner in the schedule cache
+that ``repro.kernels.ops`` consults by default:
+
+    PYTHONPATH=src python examples/schedule_search.py --layer Conv4 --tpu
 """
 
 import argparse
@@ -11,11 +21,7 @@ from repro.configs import PAPER_LAYERS
 from repro.core import make_objective, optimize_beam
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--layer", default="Conv4", choices=PAPER_LAYERS)
-    ap.add_argument("--levels", type=int, default=3)
-    args = ap.parse_args()
+def codesign_sweep(args) -> None:
     p = PAPER_LAYERS[args.layer]
     print(f"{args.layer}: {p.macs/1e9:.2f} GMACs")
     print(f"{'budget':>8s} {'pJ/MAC':>8s} {'area mm2':>9s}  schedule")
@@ -27,6 +33,52 @@ def main() -> None:
         r = best.report
         print(f"{budget_kb:6d}KB {r.pj_per_mac:8.3f} {r.area_mm2:9.2f}  "
               f"{best.string}")
+
+
+def tpu_tune(args) -> None:
+    from repro.tune import OpSpec, ScheduleCache, describe_candidates, \
+        tune_op
+
+    p = PAPER_LAYERS[args.layer]
+    if p.Fw == 1 and p.Fh == 1 and p.Y == 1:    # FC layer -> GEMM
+        spec = OpSpec("matmul", (p.X * p.N, p.K, p.C), args.dtype)
+    else:
+        spec = OpSpec("conv2d", (p.X, p.Y, p.C, p.K, p.Fw, p.Fh),
+                      args.dtype)
+    print(f"{args.layer} as {spec.op}{spec.dims}: lowering the analytical "
+          "winners to Pallas tiles")
+    print(describe_candidates(spec))
+
+    cache = ScheduleCache(args.cache) if args.cache else None
+    winner = tune_op(spec.op, spec.dims, spec.dtype,
+                     measure=args.measure, cache=cache)
+    extra = (f", {winner.measured_us:.0f} us/call measured"
+             if winner.measured_us is not None else "")
+    print(f"\nwinner ({winner.source}{extra}): tiles={winner.tiles}")
+    if args.cache:
+        print(f"persisted to {args.cache}; point REPRO_TUNE_CACHE at it "
+              "so kernels.ops picks it up")
+    else:
+        print("persisted: kernels.ops will use these tiles for this "
+              "shape from now on")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--layer", default="Conv4", choices=PAPER_LAYERS)
+    ap.add_argument("--levels", type=int, default=3)
+    ap.add_argument("--tpu", action="store_true",
+                    help="lower to Pallas tiles via the autotuner")
+    ap.add_argument("--measure", action="store_true",
+                    help="with --tpu: time the top candidates")
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--cache", default=None,
+                    help="with --tpu: schedule-cache path override")
+    args = ap.parse_args()
+    if args.tpu:
+        tpu_tune(args)
+    else:
+        codesign_sweep(args)
 
 
 if __name__ == "__main__":

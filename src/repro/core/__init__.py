@@ -27,9 +27,10 @@ from repro.core.multicore import (MulticoreReport, best_scheme,
 from repro.core.gemm_lowering import (direct_blocking_accesses,
                                       gemm_lowering_accesses,
                                       lowered_gemm_problem)
-from repro.core.tpu_adapter import (TPU_V5E, TpuTarget, conv_tiles,
+from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
+                                    conv_tile_candidates, conv_tiles,
                                     flash_tiles, layer_sharding_advice,
-                                    matmul_tiles)
+                                    matmul_tile_candidates, matmul_tiles)
 
 __all__ = [
     "BlockingString", "Dim", "Extents", "Loop", "Problem", "divisors",
@@ -44,6 +45,7 @@ __all__ = [
     "MulticoreReport", "best_scheme", "evaluate_multicore",
     "direct_blocking_accesses", "gemm_lowering_accesses",
     "lowered_gemm_problem",
-    "TPU_V5E", "TpuTarget", "conv_tiles", "flash_tiles",
-    "layer_sharding_advice", "matmul_tiles",
+    "TPU_V5E", "TpuTarget", "conv_tile_candidates", "conv_tiles",
+    "flash_tiles", "layer_sharding_advice", "matmul_tile_candidates",
+    "matmul_tiles",
 ]

@@ -41,6 +41,27 @@ class OptResult:
     def energy_pj(self) -> float:
         return self.report.total_pj
 
+    @property
+    def dram_accesses(self) -> int:
+        """Total DRAM-boundary accesses (elements) of this schedule."""
+        return analyze(self.string).dram_accesses
+
+    def level0_extents(self):
+        """Cumulative extents at the end of the innermost blocking level.
+
+        The innermost level ends after the first occurrence of every
+        blockable compute dim (X, C, K); the extents below that point are
+        the level-0 tile a kernel should materialize on chip.  Used by the
+        TPU lowering to turn an optimizer string into BlockSpec tiles.
+        """
+        s = self.string
+        seen: set = set()
+        for i, lp in enumerate(s.loops):
+            seen.add(lp.dim)
+            if {Dim.X, Dim.C, Dim.K} <= seen:
+                return s.extents_below(i + 1)
+        return s.extents_below(len(s.loops))
+
 
 Objective = Callable[[BlockingString], EnergyReport]
 

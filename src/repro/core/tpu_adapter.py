@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 from repro.core.hierarchy import MemLevel
 from repro.core.loopnest import Dim, Problem, divisors
@@ -49,6 +50,15 @@ TPU_V5E = TpuTarget(
 )
 
 
+def default_vmem_budget(target: TpuTarget = TPU_V5E,
+                        vmem_budget_bytes: int | None = None) -> int:
+    """Working-set budget for tile derivation: 1/8 of VMEM unless
+    overridden — headroom for Pallas pipeline buffers and the compiler.
+    The single definition shared by the snap loops here and the candidate
+    filter in ``repro.tune.lowering``."""
+    return vmem_budget_bytes or target.vmem_bytes // 8
+
+
 def _round_to(v: int, mult: int, lo: int, hi: int) -> int:
     v = max(lo, min(hi, (v // mult) * mult))
     return v if v >= mult else min(hi, mult)
@@ -66,42 +76,23 @@ def _pick_tile(extent: int, target: int, mult: int) -> int:
     return _round_to(cap, mult, mult, extent)
 
 
-@functools.lru_cache(maxsize=512)
-def matmul_tiles(M: int, N: int, K: int, bytes_per_elem: int = 2,
-                 vmem_budget_bytes: int | None = None,
-                 target: TpuTarget = TPU_V5E) -> tuple[int, int, int]:
-    """(bm, bk, bn) tile for C[M,N] += A[M,K] @ B[K,N] from the paper model.
+def _matmul_fits(bm: int, bk: int, bn: int, bytes_per_elem: int,
+                 budget: int) -> bool:
+    # lazy import: the kernel module (jax) owns its VMEM layout; core
+    # stays importable without jax until tiles are actually derived.
+    from repro.kernels.matmul_blocked import vmem_bytes_required
+    return vmem_bytes_required(bm, bk, bn, bytes_per_elem) <= budget
 
-    The optimizer sees a 2-level hierarchy (VMEM working set, HBM above)
-    and alignment candidates restricted to MXU multiples; the analytical
-    winner is then snapped to hardware alignment.
-    """
-    budget = vmem_budget_bytes or target.vmem_bytes // 8  # leave headroom
-    problem = Problem.gemm(M=M, N_cols=N, K_reduce=K,
-                           bytes_per_elem=bytes_per_elem)
-    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
-    objective = make_objective("fixed", levels)
-    align = {Dim.X: target.sublane, Dim.K: target.lane, Dim.C: target.lane}
-    try:
-        res = optimize_exhaustive(problem, objective, n_levels=2, top=1,
-                                  align=align)
-        s = res[0].string
-    except Exception:
-        s = None
-    if s is not None:
-        # innermost cumulative extents = level-0 block
-        e = s.extents_below(_level0_end(s))
-        bm, bn, bk = e.X, e.K, e.C
-    else:
-        bm, bn, bk = 256, 256, 512
-    # snap to hardware: lanes on the minor (N, K) dims, sublanes on M
+
+def _snap_matmul(bm: int, bk: int, bn: int, M: int, N: int, K: int,
+                 bytes_per_elem: int, budget: int,
+                 target: TpuTarget) -> tuple[int, int, int]:
+    """Snap an analytical (bm, bk, bn) to MXU alignment + VMEM fit."""
+    # lanes on the minor (N, K) dims, sublanes on M
     bm = _pick_tile(M, max(bm, target.sublane), target.sublane)
     bn = _pick_tile(N, max(bn, target.lane), target.lane)
     bk = _pick_tile(K, max(bk, target.lane), target.lane)
-    # enforce VMEM fit: A-tile + B-tile + C-tile (fp32 accum)
-    def fits(bm, bk, bn) -> bool:
-        return (bm * bk + bk * bn) * bytes_per_elem + bm * bn * 4 <= budget
-    while not fits(bm, bk, bn):
+    while not _matmul_fits(bm, bk, bn, bytes_per_elem, budget):
         # shrink the largest contributor
         if bk * (bm + bn) >= bm * bn and bk > target.lane:
             bk = max(target.lane, bk // 2)
@@ -114,44 +105,71 @@ def matmul_tiles(M: int, N: int, K: int, bytes_per_elem: int = 2,
     return bm, bk, bn
 
 
-def _level0_end(s) -> int:
-    """Position after the innermost occurrence of each blockable dim."""
-    seen: set = set()
-    for i, lp in enumerate(s.loops):
-        seen.add(lp.dim)
-        if {Dim.X, Dim.C, Dim.K} <= seen:
-            return i + 1
-    return len(s.loops)
+@functools.lru_cache(maxsize=512)
+def matmul_tile_candidates(M: int, N: int, K: int, bytes_per_elem: int = 2,
+                           vmem_budget_bytes: int | None = None,
+                           target: TpuTarget = TPU_V5E,
+                           top: int = 8) -> tuple[tuple[int, int, int], ...]:
+    """Ranked (bm, bk, bn) candidates for C[M,N] += A[M,K] @ B[K,N].
 
-
-@functools.lru_cache(maxsize=256)
-def conv_tiles(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
-               bytes_per_elem: int = 2,
-               vmem_budget_bytes: int | None = None,
-               target: TpuTarget = TPU_V5E) -> tuple[int, int, int, int]:
-    """(bx, by, bc, bk) VMEM tile for the direct blocked conv kernel."""
-    budget = vmem_budget_bytes or target.vmem_bytes // 8
-    problem = Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh,
-                      bytes_per_elem=bytes_per_elem)
+    The optimizer sees a 2-level hierarchy (VMEM working set, HBM above)
+    and alignment candidates restricted to MXU multiples; each analytical
+    winner is then snapped to hardware alignment and the VMEM budget.
+    Order follows the optimizer's energy ranking; the autotuner
+    (``repro.tune``) re-ranks by predicted DRAM traffic and measurement.
+    """
+    budget = default_vmem_budget(target, vmem_budget_bytes)
+    problem = Problem.gemm(M=M, N_cols=N, K_reduce=K,
+                           bytes_per_elem=bytes_per_elem)
     levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
     objective = make_objective("fixed", levels)
-    align = {Dim.K: target.lane, Dim.C: target.lane}
-    res = optimize_exhaustive(problem, objective, n_levels=2, top=1,
-                              align=align, max_orders=24)
-    e = res[0].string.extents_below(_level0_end(res[0].string))
-    bx = _pick_tile(X, max(e.X, target.sublane), 1)
-    by = _pick_tile(Y, e.Y, 1)
-    bc = _pick_tile(C, max(e.C, min(C, target.lane)),
-                    min(C, target.lane) if C >= target.lane else 1)
-    bk = _pick_tile(K, max(e.K, min(K, target.lane)),
-                    min(K, target.lane) if K >= target.lane else 1)
+    align = {Dim.X: target.sublane, Dim.K: target.lane, Dim.C: target.lane}
+    raw: list[tuple[int, int, int]] = []
+    try:
+        for r in optimize_exhaustive(problem, objective, n_levels=2,
+                                     top=top, align=align):
+            e = r.level0_extents()
+            raw.append((e.X, e.C, e.K))          # (bm, bk, bn)
+    except Exception as exc:
+        warnings.warn(f"blocking search failed for GEMM {M}x{N}x{K} "
+                      f"({exc!r}); using heuristic seed tiles")
+    raw.append((256, 512, 256))                  # heuristic fallback seed
+    out: list[tuple[int, int, int]] = []
+    for bm, bk, bn in raw:
+        cand = _snap_matmul(bm, bk, bn, M, N, K, bytes_per_elem, budget,
+                            target)
+        if cand not in out:
+            out.append(cand)
+    return tuple(out[:top])
 
-    def fits(bx, by, bc, bk) -> bool:
-        inp = (bx + Fw - 1) * (by + Fh - 1) * bc * bytes_per_elem
-        wgt = Fw * Fh * bc * bk * bytes_per_elem
-        out = bx * by * bk * 4
-        return inp + wgt + out <= budget
-    while not fits(bx, by, bc, bk):
+
+def matmul_tiles(M: int, N: int, K: int, bytes_per_elem: int = 2,
+                 vmem_budget_bytes: int | None = None,
+                 target: TpuTarget = TPU_V5E) -> tuple[int, int, int]:
+    """Top analytical (bm, bk, bn) tile (see matmul_tile_candidates)."""
+    return matmul_tile_candidates(M, N, K, bytes_per_elem,
+                                  vmem_budget_bytes, target)[0]
+
+
+def _conv_fits(bx: int, by: int, bc: int, bk: int, Fw: int, Fh: int,
+               bytes_per_elem: int, budget: int, stride: int) -> bool:
+    from repro.kernels.conv2d_blocked import vmem_bytes_required
+    return vmem_bytes_required(bx, by, bc, bk, Fh, Fw,
+                               bytes_per_elem, stride) <= budget
+
+
+def _snap_conv(bx: int, by: int, bc: int, bk: int,
+               X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+               bytes_per_elem: int, budget: int,
+               target: TpuTarget, stride: int) -> tuple[int, int, int, int]:
+    bx = _pick_tile(X, max(bx, target.sublane), 1)
+    by = _pick_tile(Y, by, 1)
+    bc = _pick_tile(C, max(bc, min(C, target.lane)),
+                    min(C, target.lane) if C >= target.lane else 1)
+    bk = _pick_tile(K, max(bk, min(K, target.lane)),
+                    min(K, target.lane) if K >= target.lane else 1)
+    while not _conv_fits(bx, by, bc, bk, Fw, Fh, bytes_per_elem, budget,
+                         stride):
         if bx >= by and bx > 8:
             bx = max(8, bx // 2)
         elif by > 1:
@@ -166,6 +184,49 @@ def conv_tiles(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
 
 
 @functools.lru_cache(maxsize=256)
+def conv_tile_candidates(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+                         bytes_per_elem: int = 2,
+                         vmem_budget_bytes: int | None = None,
+                         target: TpuTarget = TPU_V5E, top: int = 8,
+                         stride: int = 1,
+                         ) -> tuple[tuple[int, int, int, int], ...]:
+    """Ranked (bx, by, bc, bk) VMEM tiles for the direct blocked conv."""
+    budget = default_vmem_budget(target, vmem_budget_bytes)
+    problem = Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh, stride=stride,
+                      bytes_per_elem=bytes_per_elem)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    objective = make_objective("fixed", levels)
+    align = {Dim.K: target.lane, Dim.C: target.lane}
+    raw: list[tuple[int, int, int, int]] = []
+    try:
+        for r in optimize_exhaustive(problem, objective, n_levels=2,
+                                     top=top, align=align, max_orders=24):
+            e = r.level0_extents()
+            raw.append((e.X, e.Y, e.C, e.K))
+    except Exception as exc:
+        warnings.warn(f"blocking search failed for conv "
+                      f"{(X, Y, C, K, Fw, Fh)} ({exc!r}); using heuristic "
+                      "seed tiles")
+    raw.append((X, Y, min(C, target.lane), min(K, target.lane)))
+    out: list[tuple[int, int, int, int]] = []
+    for bx, by, bc, bk in raw:
+        cand = _snap_conv(bx, by, bc, bk, X, Y, C, K, Fw, Fh,
+                          bytes_per_elem, budget, target, stride)
+        if cand not in out:
+            out.append(cand)
+    return tuple(out[:top])
+
+
+def conv_tiles(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+               bytes_per_elem: int = 2,
+               vmem_budget_bytes: int | None = None,
+               target: TpuTarget = TPU_V5E) -> tuple[int, int, int, int]:
+    """Top analytical (bx, by, bc, bk) tile (see conv_tile_candidates)."""
+    return conv_tile_candidates(X, Y, C, K, Fw, Fh, bytes_per_elem,
+                                vmem_budget_bytes, target)[0]
+
+
+@functools.lru_cache(maxsize=256)
 def flash_tiles(seq_q: int, seq_kv: int, head_dim: int,
                 bytes_per_elem: int = 2,
                 vmem_budget_bytes: int | None = None,
@@ -176,7 +237,7 @@ def flash_tiles(seq_q: int, seq_kv: int, head_dim: int,
     every query block -> big tiles amortize HBM fetches) and the running
     (m, l, acc) state is the output buffer held across the KV loop.
     """
-    budget = vmem_budget_bytes or target.vmem_bytes // 8
+    budget = default_vmem_budget(target, vmem_budget_bytes)
     bq = _pick_tile(seq_q, 512, target.sublane)
     bkv = _pick_tile(seq_kv, 1024, target.lane if seq_kv >= target.lane
                      else 1)

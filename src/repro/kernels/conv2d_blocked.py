@@ -27,6 +27,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def vmem_bytes_required(bx: int, by: int, bc: int, bk: int,
+                        fh: int, fw: int, bytes_per_elem: int = 2,
+                        stride: int = 1) -> int:
+    """VMEM footprint of one grid step of :func:`conv2d_block`.
+
+    The input tile carries the halo ((bx-1)*stride+fw wide); input and
+    weight tiles are streamed across the (k, c) grid (double-buffered by
+    the Pallas pipeline), while the output block and its fp32 accumulator
+    scratch stay resident across the C reduction.
+    """
+    ih = (by - 1) * stride + fh
+    iw = (bx - 1) * stride + fw
+    streamed = 2 * (ih * iw * bc + fh * fw * bc * bk) * bytes_per_elem
+    resident = bx * by * bk * (bytes_per_elem + 4)
+    return streamed + resident
+
+
 def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh: int, fw: int,
                  oh: int, ow: int, n_c: int, stride: int):
     @pl.when(pl.program_id(1) == 0)

@@ -21,6 +21,20 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def vmem_bytes_required(bm: int, bk: int, bn: int,
+                        bytes_per_elem: int = 2) -> int:
+    """VMEM footprint of one grid step of :func:`matmul_blocked`.
+
+    The A and B tiles are streamed (Pallas double-buffers them across grid
+    steps, hence the factor 2); the output block plus the fp32 accumulator
+    scratch stay resident.  This is the single source of truth the
+    schedule lowering checks tile candidates against.
+    """
+    streamed = 2 * (bm * bk + bk * bn) * bytes_per_elem
+    resident = bm * bn * (bytes_per_elem + 4)
+    return streamed + resident
+
+
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():

@@ -1,10 +1,12 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Each op (a) derives its VMEM tiles from the paper's blocking model
-(``repro.core.tpu_adapter``), (b) runs the Pallas kernel when shapes tile
-cleanly, and (c) falls back to the jnp oracle otherwise — so models can use
-these ops unconditionally.  ``interpret`` defaults to True off-TPU
-(kernel body executed in Python for correctness validation on CPU).
+Each op (a) asks the schedule autotuner (``repro.tune.best_schedule``)
+for its VMEM tiles — a tuned, persisted schedule when one is cached for
+this (op, shapes, dtype, device), else the analytical blocking model's
+winner — (b) runs the Pallas kernel when shapes tile cleanly, and
+(c) falls back to the jnp oracle otherwise — so models can use these ops
+unconditionally.  ``interpret`` defaults to True off-TPU (kernel body
+executed in Python for correctness validation on CPU).
 """
 
 from __future__ import annotations
@@ -15,11 +17,12 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.tpu_adapter import conv_tiles, flash_tiles, matmul_tiles
+from repro.core.tpu_adapter import flash_tiles
 from repro.kernels import ref
 from repro.kernels.conv2d_blocked import conv2d_block
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul_blocked import matmul_blocked
+from repro.tune import best_schedule
 
 
 def default_interpret() -> bool:
@@ -29,10 +32,11 @@ def default_interpret() -> bool:
 def matmul(a: jax.Array, b: jax.Array,
            tiles: tuple[int, int, int] | None = None,
            interpret: bool | None = None) -> jax.Array:
-    """Blocked GEMM with model-derived tiles; oracle fallback."""
+    """Blocked GEMM with tuned/model-derived tiles; oracle fallback."""
     m, k = a.shape
     _, n = b.shape
-    bm, bk, bn = tiles or matmul_tiles(m, n, k, a.dtype.itemsize)
+    bm, bk, bn = tiles or best_schedule("matmul", (m, n, k),
+                                        a.dtype.name).tiles
     if m % bm or k % bk or n % bn:
         return ref.matmul_ref(a, b)
     interpret = default_interpret() if interpret is None else interpret
@@ -51,8 +55,8 @@ def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
     fh, fw, _, k = w.shape
     oh = (h - fh) // stride + 1
     ow = (wd - fw) // stride + 1
-    bx, by, bc, bk = tiles or conv_tiles(ow, oh, c, k, fw, fh,
-                                         x.dtype.itemsize)
+    bx, by, bc, bk = tiles or best_schedule(
+        "conv2d", (ow, oh, c, k, fw, fh), x.dtype.name, stride=stride).tiles
     if c % bc or k % bk:
         return ref.conv2d_ref(x, w, stride)
     interpret = default_interpret() if interpret is None else interpret

@@ -1,0 +1,60 @@
+"""Offline schedule tuning CLI — pre-populate the schedule cache.
+
+    PYTHONPATH=src python -m repro.tune matmul 4096 4096 4096
+    PYTHONPATH=src python -m repro.tune conv2d 56 56 128 256 3 3 \\
+        --dtype bfloat16 --stride 1 --cache experiments/schedules.json
+
+Prints the analytic candidate table, times the top-N (on device, or in
+Pallas interpret mode off-TPU unless ``--no-measure``), and persists the
+winner.  ``kernels.ops`` reads the *default* cache location
+(``$REPRO_TUNE_CACHE``, else ``~/.cache/repro/schedules.json``) — when
+tuning into a ``--cache`` override, point ``REPRO_TUNE_CACHE`` at that
+file at run time.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.tune import (OpSpec, ScheduleCache, describe_candidates,
+                        device_kind, tune_op)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune",
+                                 description=__doc__)
+    ap.add_argument("op", choices=("matmul", "conv2d"))
+    ap.add_argument("dims", type=int, nargs="+",
+                    help="matmul: M N K; conv2d: X Y C K Fw Fh "
+                         "(output-space X/Y)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--stride", type=int, default=1)
+    ap.add_argument("--top-n", type=int, default=3,
+                    help="how many candidates to time")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="persist the analytic winner without timing")
+    ap.add_argument("--cache", default=None,
+                    help="schedule cache path (default: "
+                         "$REPRO_TUNE_CACHE or ~/.cache/repro)")
+    args = ap.parse_args(argv)
+
+    spec = OpSpec(args.op, tuple(args.dims), args.dtype, args.stride)
+    print(f"tuning {spec.key(device_kind())}")
+    print(describe_candidates(spec))
+
+    cache = ScheduleCache(args.cache)
+    winner = tune_op(args.op, tuple(args.dims), args.dtype, args.stride,
+                     top_n=args.top_n, measure=not args.no_measure,
+                     cache=cache)
+    extra = (f"  {winner.measured_us:.0f} us/call"
+             if winner.measured_us is not None else "")
+    print(f"winner: tiles={winner.tiles} ({winner.source}){extra}")
+    print(f"persisted to {cache.path}")
+    if args.cache:
+        print("note: kernels.ops reads $REPRO_TUNE_CACHE (default "
+              "~/.cache/repro/schedules.json); point it at this file "
+              "to apply the schedule")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Lowering from the analytical blocking model to Pallas kernel schedules.
+
+This is the ``core -> kernels`` bridge the optimizer output flows through:
+
+1. :func:`candidates` runs the paper's schedule search for the op's loop
+   nest on the TPU hierarchy (via ``core.tpu_adapter``), snaps each winner
+   to MXU alignment + the VMEM budget, and drops candidates the kernels
+   cannot execute directly (tile sizes must divide the problem dims, or
+   ``kernels.ops`` would take its oracle fallback);
+2. :func:`schedule_to_string` maps a concrete tile tuple back onto the
+   blocking string the kernel's grid actually executes, so
+3. :func:`predicted_dram_accesses` can score any candidate with the exact
+   per-level access counts of paper §3.4 — the analytic rank the
+   measurement harness then refines.
+"""
+
+from __future__ import annotations
+
+from repro.core.hierarchy import MemLevel, cache_accesses
+from repro.core.loopnest import BlockingString, Dim, Loop
+from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
+                                    conv_tile_candidates,
+                                    default_vmem_budget,
+                                    matmul_tile_candidates)
+from repro.tune.schedule import OpSpec, Schedule
+
+# the one budget rule, shared with the snap loops in core.tpu_adapter
+vmem_budget = default_vmem_budget
+
+
+def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
+    """Check a tile tuple against the kernel's own VMEM footprint model."""
+    if spec.op == "matmul":
+        from repro.kernels.matmul_blocked import vmem_bytes_required
+        bm, bk, bn = tiles
+        return vmem_bytes_required(bm, bk, bn, spec.itemsize) <= budget
+    from repro.kernels.conv2d_blocked import vmem_bytes_required
+    bx, by, bc, bk = tiles
+    _, _, _, _, Fw, Fh = spec.dims
+    return vmem_bytes_required(bx, by, bc, bk, Fh, Fw, spec.itemsize,
+                               spec.stride) <= budget
+
+
+def divides(spec: OpSpec, tiles: tuple[int, ...]) -> bool:
+    """True iff the kernels can run these tiles without a fallback path."""
+    if spec.op == "matmul":
+        M, N, K = spec.dims
+        bm, bk, bn = tiles
+        return M % bm == 0 and K % bk == 0 and N % bn == 0
+    X, Y, C, K, _, _ = spec.dims
+    bx, by, bc, bk = tiles
+    # bc/bk divisibility is a hard kernel assert; bx/by divisibility avoids
+    # the single-spatial-tile fallback in ops._conv_one.
+    return C % bc == 0 and K % bk == 0 and X % bx == 0 and Y % by == 0
+
+
+def schedule_to_string(spec: OpSpec,
+                       tiles: tuple[int, ...]) -> BlockingString:
+    """The blocking string the Pallas kernels execute for these tiles.
+
+    Loop order mirrors the kernels exactly (inner -> outer):
+
+    * matmul: level-0 (bk, bm, bn) VMEM block, then the grid (m, n, k)
+      with k minor-most (the fp32 accumulator is the OB held across C);
+    * conv2d: Fw/Fh window loops inside the block, the (bx, by, bc, bk)
+      VMEM block, then the kernel grid (k, c) with c minor-most, then the
+      spatial halo tiles ops.py slices on the host (X inside Y).
+    """
+    p = spec.problem()
+    loops: list[Loop] = []
+    if spec.op == "matmul":
+        M, N, K = spec.dims
+        bm, bk, bn = tiles
+        loops = [Loop(Dim.C, bk), Loop(Dim.X, bm), Loop(Dim.K, bn),
+                 Loop(Dim.C, K), Loop(Dim.K, N), Loop(Dim.X, M)]
+    else:
+        X, Y, C, K, Fw, Fh = spec.dims
+        bx, by, bc, bk = tiles
+        if Fw > 1:
+            loops.append(Loop(Dim.FW, Fw))
+        if Fh > 1:
+            loops.append(Loop(Dim.FH, Fh))
+        loops += [Loop(Dim.X, bx), Loop(Dim.Y, by),
+                  Loop(Dim.C, bc), Loop(Dim.K, bk),
+                  Loop(Dim.C, C), Loop(Dim.K, K),
+                  Loop(Dim.X, X), Loop(Dim.Y, Y)]
+    return BlockingString(loops, p)
+
+
+def predicted_dram_accesses(spec: OpSpec, tiles: tuple[int, ...],
+                            vmem_budget_bytes: int | None = None,
+                            target: TpuTarget = TPU_V5E) -> int:
+    """HBM-boundary accesses (elements) of this schedule under the paper's
+    access model with a VMEM-sized on-chip level (working sets that
+    overflow the budget spill, exactly like the Fig. 3/4 methodology)."""
+    if not divides(spec, tiles):
+        raise ValueError(
+            f"tiles {tiles} do not divide {spec.op} dims {spec.dims}; "
+            "the kernels would take their oracle fallback, which the "
+            "blocking model cannot score")
+    budget = vmem_budget(target, vmem_budget_bytes)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    s = schedule_to_string(spec, tiles)
+    return cache_accesses(s, levels)[levels[-1].name]
+
+
+def candidates(spec: OpSpec,
+               vmem_budget_bytes: int | None = None,
+               target: TpuTarget = TPU_V5E,
+               top: int = 8) -> list[Schedule]:
+    """Analytically-ranked kernel schedules for one op instance.
+
+    Always returns at least one schedule.  When no snapped candidate
+    divides the problem cleanly the top raw candidate is returned anyway
+    (``kernels.ops`` will take its oracle fallback for it), with
+    ``predicted_dram_accesses`` left unset.
+    """
+    budget = vmem_budget(target, vmem_budget_bytes)
+    if spec.op == "matmul":
+        M, N, K = spec.dims
+        raw = matmul_tile_candidates(M, N, K, spec.itemsize, budget,
+                                     target, top=top)
+    else:
+        X, Y, C, K, Fw, Fh = spec.dims
+        raw = conv_tile_candidates(X, Y, C, K, Fw, Fh, spec.itemsize,
+                                   budget, target, top=top,
+                                   stride=spec.stride)
+    usable = [t for t in raw
+              if divides(spec, t) and fits_vmem(spec, t, budget)]
+    if not usable:
+        return [Schedule(spec, raw[0], source="analytic")]
+    scored = [Schedule(spec, t, source="analytic",
+                       predicted_dram_accesses=predicted_dram_accesses(
+                           spec, t, budget, target))
+              for t in usable]
+    # fewest predicted DRAM accesses first; break ties toward bigger
+    # blocks (fewer grid steps -> less pipeline overhead)
+    def tile_product(s: Schedule) -> int:
+        prod = 1
+        for t in s.tiles:
+            prod *= t
+        return prod
+    scored.sort(key=lambda s: (s.predicted_dram_accesses, -tile_product(s)))
+    return scored[:top]

@@ -1,0 +1,86 @@
+"""Measurement harness: time one candidate schedule end-to-end.
+
+Runs the real ``kernels.ops`` entry points (so spatial halo slicing, vmap
+over batch, etc. are all included) with the candidate's tiles pinned, and
+returns the best-of-N wall time in microseconds.  On CPU the kernels run
+in Pallas ``interpret=True`` mode — useful as a correctness-preserving
+tie-breaker in tests and CI, but *not* a TPU performance proxy; the
+analytic DRAM-access rank from ``tune.lowering`` carries that signal.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.tune.schedule import Schedule
+
+
+def _block(x) -> None:
+    np.asarray(x)  # host transfer forces completion in both modes
+
+
+def make_inputs(schedule: Schedule, seed: int = 0):
+    """Representative operand arrays for the schedule's OpSpec."""
+    import jax.numpy as jnp
+
+    spec = schedule.spec
+    rng = np.random.default_rng(seed)
+    if spec.op == "matmul":
+        M, N, K = spec.dims
+        a = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
+        b = jnp.asarray(rng.normal(size=(K, N)), spec.dtype)
+        return a, b
+    X, Y, C, K, Fw, Fh = spec.dims
+    ih = (Y - 1) * spec.stride + Fh
+    iw = (X - 1) * spec.stride + Fw
+    x = jnp.asarray(rng.normal(size=(1, ih, iw, C)), spec.dtype)
+    w = jnp.asarray(rng.normal(size=(Fh, Fw, C, K)) * 0.5, spec.dtype)
+    return x, w
+
+
+def run_once(schedule: Schedule, inputs, interpret: bool | None = None):
+    """Execute the schedule's op once and return the (blocked-on) result."""
+    from repro.kernels import ops
+
+    spec = schedule.spec
+    if spec.op == "matmul":
+        a, b = inputs
+        out = ops.matmul(a, b, tiles=schedule.tiles, interpret=interpret)
+    else:
+        x, w = inputs
+        out = ops.conv2d(x, w, stride=spec.stride, tiles=schedule.tiles,
+                         interpret=interpret)
+    _block(out)
+    return out
+
+
+def measure(schedule: Schedule, interpret: bool | None = None,
+            iters: int = 3, warmup: int = 1, seed: int = 0) -> float:
+    """Best-of-``iters`` latency (microseconds) for one schedule."""
+    inputs = make_inputs(schedule, seed)
+    for _ in range(warmup):
+        run_once(schedule, inputs, interpret)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run_once(schedule, inputs, interpret)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def measure_top(schedules: list[Schedule], top_n: int = 3,
+                interpret: bool | None = None, iters: int = 3,
+                ) -> list[Schedule]:
+    """Time the first ``top_n`` schedules; return ALL schedules re-ranked
+    (measured ones first, by latency; unmeasured keep their analytic
+    order behind them)."""
+    import dataclasses
+
+    timed = [dataclasses.replace(s, measured_us=measure(s, interpret,
+                                                        iters=iters),
+                                 source="measured")
+             for s in schedules[:top_n]]
+    timed.sort(key=lambda s: s.measured_us)
+    return timed + schedules[top_n:]

@@ -1,0 +1,121 @@
+"""Schedule data model for the autotuner.
+
+An :class:`OpSpec` names one tunable operator instance — the op kind plus
+the problem dimensions the kernels see:
+
+* ``matmul``: ``dims = (M, N, K)`` for ``C[M,N] = A[M,K] @ B[K,N]``;
+* ``conv2d``: ``dims = (X, Y, C, K, Fw, Fh)`` in the paper's output-space
+  coordinates (X = output width, Y = output height), plus ``stride``.
+
+A :class:`Schedule` is a concrete kernel configuration for that spec: the
+Pallas tile tuple (``(bm, bk, bn)`` or ``(bx, by, bc, bk)``), where it came
+from (``analytic`` / ``measured`` / ``cache`` / ``override``), the model's
+predicted DRAM-boundary accesses, and — when timed — the measured latency.
+Both serialize losslessly to the JSON dicts the schedule cache stores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.loopnest import Problem
+
+OPS = ("matmul", "conv2d")
+TILE_RANK = {"matmul": 3, "conv2d": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One tunable operator instance (the cache-key identity)."""
+
+    op: str
+    dims: tuple[int, ...]
+    dtype: str = "float32"
+    stride: int = 1
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r}; expected one of {OPS}")
+        want = {"matmul": 3, "conv2d": 6}[self.op]
+        if len(self.dims) != want:
+            raise ValueError(
+                f"{self.op} expects {want} dims, got {self.dims}")
+        if any(d < 1 for d in self.dims) or self.stride < 1:
+            raise ValueError(
+                f"dims and stride must be >= 1, got dims={self.dims} "
+                f"stride={self.stride}")
+        object.__setattr__(self, "dims", tuple(int(d) for d in self.dims))
+
+    @property
+    def itemsize(self) -> int:
+        try:
+            return int(np.dtype(self.dtype).itemsize)
+        except TypeError:
+            # bfloat16 & friends live in ml_dtypes (a jax dependency)
+            import ml_dtypes
+            return int(np.dtype(getattr(ml_dtypes, self.dtype)).itemsize)
+
+    def problem(self) -> Problem:
+        """The spec as the paper's loop-nest Problem."""
+        if self.op == "matmul":
+            M, N, K = self.dims
+            return Problem.gemm(M=M, N_cols=N, K_reduce=K,
+                                bytes_per_elem=self.itemsize)
+        X, Y, C, K, Fw, Fh = self.dims
+        return Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh,
+                       stride=self.stride, bytes_per_elem=self.itemsize)
+
+    def key(self, device_kind: str) -> str:
+        """Stable cache key: ``op/dims/dtype/device``."""
+        if self.op == "matmul":
+            M, N, K = self.dims
+            shape = f"m{M}n{N}k{K}"
+        else:
+            X, Y, C, K, Fw, Fh = self.dims
+            shape = f"x{X}y{Y}c{C}k{K}f{Fw}x{Fh}s{self.stride}"
+        return f"{self.op}/{shape}/{self.dtype}/{device_kind}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A concrete kernel schedule for one OpSpec."""
+
+    spec: OpSpec
+    tiles: tuple[int, ...]
+    source: str = "analytic"
+    predicted_dram_accesses: int | None = None
+    measured_us: float | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "tiles", tuple(int(t) for t in self.tiles))
+        if len(self.tiles) != TILE_RANK[self.spec.op]:
+            raise ValueError(
+                f"{self.spec.op} schedule needs {TILE_RANK[self.spec.op]} "
+                f"tile sizes, got {self.tiles}")
+
+    def with_source(self, source: str) -> "Schedule":
+        return dataclasses.replace(self, source=source)
+
+    def to_json(self) -> dict:
+        return {
+            "op": self.spec.op,
+            "dims": list(self.spec.dims),
+            "dtype": self.spec.dtype,
+            "stride": self.spec.stride,
+            "tiles": list(self.tiles),
+            "source": self.source,
+            "predicted_dram_accesses": self.predicted_dram_accesses,
+            "measured_us": self.measured_us,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Schedule":
+        spec = OpSpec(op=d["op"], dims=tuple(d["dims"]),
+                      dtype=d.get("dtype", "float32"),
+                      stride=int(d.get("stride", 1)))
+        return cls(spec=spec, tiles=tuple(d["tiles"]),
+                   source=d.get("source", "cache"),
+                   predicted_dram_accesses=d.get("predicted_dram_accesses"),
+                   measured_us=d.get("measured_us"))

@@ -1,6 +1,12 @@
 import os
 import sys
+import tempfile
 
 # tests see ONE device (the dry-run sets its own flags in-process)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# hermetic schedule cache: never read/write the user's ~/.cache/repro
+os.environ.setdefault(
+    "REPRO_TUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-tune-test-"),
+                 "schedules.json"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

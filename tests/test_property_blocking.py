@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the blocking model invariants."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BlockingString, Dim, Loop, Problem, analyze,
