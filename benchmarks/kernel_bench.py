@@ -1,9 +1,12 @@
 """Kernel micro-benchmarks: Pallas (interpret) vs oracle + model-predicted
 traffic for the tile choices (analytic; wall-clock on CPU is NOT the TPU
 story, so the derived column reports the model's DRAM-traffic ratio),
-plus autotuned-vs-hardcoded tile comparisons on the same access model."""
+plus autotuned-vs-hardcoded tile comparisons on the same access model —
+for the FORWARD kernels and (ISSUE 2) the custom-VJP BACKWARD nests, so
+the BENCH json carries a training-cost axis."""
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
@@ -33,6 +36,7 @@ def matmul_traffic_ratio(m, n, k) -> float:
 # as the baseline the tuned schedules are compared against
 DEFAULT_MATMUL_TILES = (64, 128, 128)
 DEFAULT_CONV_TILES = (13, 13, 32, 64)
+DEFAULT_CONV_DGRAD_TILES = (14, 14, 64, 32)
 
 
 def tuned_vs_default(spec: OpSpec, default_tiles) -> tuple[tuple, str]:
@@ -70,6 +74,20 @@ def run() -> None:
                                atol=1e-3)
     emit("kernel/matmul_256x512x256_tuned", us, derived)
 
+    # matmul BACKWARD: the two dgrad nests (dA: (M,K,N); dB: (K,N,M)),
+    # tuned vs the hardcoded default on predicted DRAM accesses, plus the
+    # end-to-end jax.grad wall time through the custom-VJP Pallas kernels
+    da_spec = OpSpec("matmul_dgrad", (256, 512, 256), "float32")
+    _, da_derived = tuned_vs_default(da_spec, DEFAULT_MATMUL_TILES)
+    db_spec = OpSpec("matmul_dgrad", (512, 256, 256), "float32")
+    _, db_derived = tuned_vs_default(db_spec, DEFAULT_MATMUL_TILES)
+    grad_fn = jax.grad(
+        lambda a, b: jnp.sum(ops.matmul(a, b, interpret=True) ** 2),
+        argnums=(0, 1))
+    us, _ = timed(lambda: jax.tree.map(np.asarray, grad_fn(a, b)))
+    emit("kernel/matmul_256x512x256_bwd", us,
+         f"dA {da_derived}; dB {db_derived}")
+
     # conv
     x = jnp.asarray(rng.normal(size=(1, 28, 28, 32)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(3, 3, 32, 64)), jnp.float32)
@@ -86,6 +104,19 @@ def run() -> None:
     np.testing.assert_allclose(tuned_out, ref.conv2d_ref(x, w), rtol=1e-2,
                                atol=1e-2)
     emit("kernel/conv_28x28x32x64_tuned", us, derived)
+
+    # conv BACKWARD: wgrad shares the forward dims; dgrad is the
+    # transposed conv (28x28 output space, channels swapped)
+    wg_spec = OpSpec("conv2d_wgrad", (26, 26, 32, 64, 3, 3), "float32")
+    _, wg_derived = tuned_vs_default(wg_spec, DEFAULT_CONV_TILES)
+    dg_spec = OpSpec("conv2d_dgrad", (28, 28, 64, 32, 3, 3), "float32")
+    _, dg_derived = tuned_vs_default(dg_spec, DEFAULT_CONV_DGRAD_TILES)
+    conv_grad = jax.grad(
+        lambda x, w: jnp.sum(ops.conv2d(x, w, interpret=True) ** 2),
+        argnums=(0, 1))
+    us, _ = timed(lambda: jax.tree.map(np.asarray, conv_grad(x, w)))
+    emit("kernel/conv_28x28x32x64_bwd", us,
+         f"wgrad {wg_derived}; dgrad {dg_derived}")
 
     # attention
     q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)

@@ -23,6 +23,10 @@ def main() -> None:
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--blocked-kernels", action="store_true",
+                    help="projections through the differentiable blocked "
+                         "Pallas GEMMs (interpret mode on CPU: slow, "
+                         "demonstrates the training path of ISSUE 2)")
     args = ap.parse_args()
 
     # scale the smoke config up to ~20M params (real training, CPU-sized)
@@ -32,6 +36,7 @@ def main() -> None:
     ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
     tc = TrainConfig(
         opt=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+        blocked_linear=args.blocked_kernels,
         ckpt_dir=ckpt_dir, ckpt_every=50, log_every=10)
 
     def batches(start=0):

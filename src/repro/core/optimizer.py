@@ -63,6 +63,25 @@ class OptResult:
         return s.extents_below(len(s.loops))
 
 
+def ranked_level0_tiles(problem: Problem,
+                        levels: Sequence[MemLevel],
+                        align: dict[Dim, int] | None = None,
+                        top: int = 8,
+                        max_orders: int | None = None) -> list:
+    """Ranked level-0 tile extents for a loop nest on a fixed hierarchy.
+
+    The single candidate-ranking entry shared by forward AND backward
+    kernel lowering (``core.tpu_adapter``): backward nests (dgrad/wgrad)
+    are the same loop-nest family with dims relabelled, so they reuse
+    this search + :meth:`OptResult.level0_extents` instead of growing
+    their own.  Returns the per-schedule extents in energy rank order.
+    """
+    objective = make_objective("fixed", levels)
+    results = optimize_exhaustive(problem, objective, n_levels=2, top=top,
+                                  align=align, max_orders=max_orders)
+    return [r.level0_extents() for r in results]
+
+
 Objective = Callable[[BlockingString], EnergyReport]
 
 

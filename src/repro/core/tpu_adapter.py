@@ -25,7 +25,7 @@ import warnings
 
 from repro.core.hierarchy import MemLevel
 from repro.core.loopnest import Dim, Problem, divisors
-from repro.core.optimizer import make_objective, optimize_exhaustive
+from repro.core.optimizer import ranked_level0_tiles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,13 +122,10 @@ def matmul_tile_candidates(M: int, N: int, K: int, bytes_per_elem: int = 2,
     problem = Problem.gemm(M=M, N_cols=N, K_reduce=K,
                            bytes_per_elem=bytes_per_elem)
     levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
-    objective = make_objective("fixed", levels)
     align = {Dim.X: target.sublane, Dim.K: target.lane, Dim.C: target.lane}
     raw: list[tuple[int, int, int]] = []
     try:
-        for r in optimize_exhaustive(problem, objective, n_levels=2,
-                                     top=top, align=align):
-            e = r.level0_extents()
+        for e in ranked_level0_tiles(problem, levels, align=align, top=top):
             raw.append((e.X, e.C, e.K))          # (bm, bk, bn)
     except Exception as exc:
         warnings.warn(f"blocking search failed for GEMM {M}x{N}x{K} "
@@ -195,13 +192,11 @@ def conv_tile_candidates(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
     problem = Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh, stride=stride,
                       bytes_per_elem=bytes_per_elem)
     levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
-    objective = make_objective("fixed", levels)
     align = {Dim.K: target.lane, Dim.C: target.lane}
     raw: list[tuple[int, int, int, int]] = []
     try:
-        for r in optimize_exhaustive(problem, objective, n_levels=2,
-                                     top=top, align=align, max_orders=24):
-            e = r.level0_extents()
+        for e in ranked_level0_tiles(problem, levels, align=align, top=top,
+                                     max_orders=24):
             raw.append((e.X, e.Y, e.C, e.K))
     except Exception as exc:
         warnings.warn(f"blocking search failed for conv "
@@ -224,6 +219,34 @@ def conv_tiles(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
     """Top analytical (bx, by, bc, bk) tile (see conv_tile_candidates)."""
     return conv_tile_candidates(X, Y, C, K, Fw, Fh, bytes_per_elem,
                                 vmem_budget_bytes, target)[0]
+
+
+def backward_tile_candidates(op: str, dims: tuple[int, ...],
+                             bytes_per_elem: int = 2,
+                             vmem_budget_bytes: int | None = None,
+                             target: TpuTarget = TPU_V5E, top: int = 8,
+                             stride: int = 1) -> tuple[tuple[int, ...], ...]:
+    """Ranked tiles for the backward nests, reusing the forward searches.
+
+    The backward passes are the same loop-nest families (the paper's
+    analysis is indifferent to which operand is written), so no new
+    search is grown: ``matmul_dgrad`` is a GEMM over the cotangent's
+    (M, N, K); ``conv2d_dgrad`` is the transposed conv as a direct conv
+    (channels swapped, stride folded into host dilation, hence stride 1
+    here); ``conv2d_wgrad`` shares the forward conv's dims with (bx, by)
+    blocking the spatial reduction.  Candidate ranking flows through
+    ``core.optimizer.ranked_level0_tiles`` exactly as for the forward.
+    """
+    if op == "matmul_dgrad":
+        M, N, K = dims
+        return matmul_tile_candidates(M, N, K, bytes_per_elem,
+                                      vmem_budget_bytes, target, top)
+    if op not in ("conv2d_dgrad", "conv2d_wgrad"):
+        raise ValueError(f"not a backward op: {op!r}")
+    X, Y, C, K, Fw, Fh = dims
+    return conv_tile_candidates(X, Y, C, K, Fw, Fh, bytes_per_elem,
+                                vmem_budget_bytes, target, top,
+                                stride=1 if op == "conv2d_dgrad" else stride)
 
 
 @functools.lru_cache(maxsize=256)

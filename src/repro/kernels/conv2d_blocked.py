@@ -72,6 +72,36 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh: int, fw: int,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def conv2d_tiled(img: jax.Array, w: jax.Array, *, bx: int, by: int,
+                 bc: int, bk: int, stride: int = 1,
+                 interpret: bool = False) -> jax.Array:
+    """Level-1 spatial halo tiling around :func:`conv2d_block`, one image.
+
+    The paper's outer ``X1/Y1`` loops: each (by, bx) output tile slices
+    its halo'd input window from HBM and runs the level-0 Pallas kernel.
+    Ragged spatial extents collapse to a single tile.  Shared by the
+    forward op (``ops.conv2d`` vmaps it over batch) and the dgrad driver
+    (``conv2d_bwd``), whose transposed conv is this same nest.
+    """
+    fh, fw = w.shape[0], w.shape[1]
+    oh = (img.shape[0] - fh) // stride + 1
+    ow = (img.shape[1] - fw) // stride + 1
+    if oh % by or ow % bx:
+        by, bx = oh, ow  # ragged spatial: single tile
+    rows = []
+    for ty in range(0, oh, by):
+        cols = []
+        for tx in range(0, ow, bx):
+            tile = jax.lax.dynamic_slice(
+                img, (ty * stride, tx * stride, 0),
+                ((by - 1) * stride + fh, (bx - 1) * stride + fw,
+                 img.shape[2]))
+            cols.append(conv2d_block(tile, w, bc=bc, bk=bk, stride=stride,
+                                     interpret=interpret))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=("bc", "bk", "stride",
                                              "interpret"))
 def conv2d_block(x: jax.Array, w: jax.Array, *, bc: int, bk: int,

@@ -1,0 +1,178 @@
+"""Backward Pallas kernels for the direct blocked convolution.
+
+The paper's blocking analysis applies to the backward nests unchanged,
+because both are CNN-like loop nests over the same six dims:
+
+* **wgrad** ``dW[i,j,c,k] = sum_{n,y,x} X[n, y*s+i, x*s+j, c] *
+  g[n, y, x, k]`` — the same (Fw, Fh, X, Y, C, K) nest with the weights
+  as the written operand and the output space (X, Y) as the reduction.
+  Lowered here as a dedicated kernel: the dW tile is the OB held
+  VMEM-resident while a whole level-1 spatial tile reduces into it, and
+  the grid is (K-tiles, C-tiles) writing disjoint dW slabs.
+* **dgrad** ``dX = conv(dilate_s(g) pad (Fh-1, Fw-1), rot180(W)^T)`` —
+  a *transposed* convolution, i.e. another direct conv with the channel
+  dims swapped (K in, C out) and stride folded into host-side input
+  dilation.  It reuses the forward level-0 kernel + level-1 tiling
+  (``conv2d_blocked.conv2d_tiled``) under its own schedule key.
+
+Schedules come from ``repro.tune.best_schedule`` under the op keys
+``"conv2d_wgrad"`` / ``"conv2d_dgrad"``; non-dividing channel tiles fall
+back to the jnp oracles in ``repro.kernels.ref`` so ``jax.grad`` through
+``ops.conv2d`` works unconditionally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.conv2d_blocked import conv2d_tiled
+
+
+def vmem_bytes_required(bx: int, by: int, bc: int, bk: int,
+                        fh: int, fw: int, bytes_per_elem: int = 2,
+                        stride: int = 1) -> int:
+    """VMEM footprint of one grid step of :func:`conv2d_wgrad_block`.
+
+    The halo'd input tile and the cotangent tile are streamed across the
+    (k, c) grid (double-buffered); the fp32 dW block being produced is
+    resident.  (dgrad reuses the forward kernel, hence the forward
+    ``conv2d_blocked.vmem_bytes_required``.)
+    """
+    ih = (by - 1) * stride + fh
+    iw = (bx - 1) * stride + fw
+    streamed = 2 * (ih * iw * bc + by * bx * bk) * bytes_per_elem
+    resident = fh * fw * bc * bk * 4
+    return streamed + resident
+
+
+def _wgrad_kernel(x_ref, g_ref, o_ref, *, fh: int, fw: int,
+                  oh: int, ow: int, stride: int):
+    x = x_ref[...]                                   # (ih, iw, bc)
+    bc = x.shape[-1]
+    bk = o_ref.shape[-1]
+    g = g_ref[...].astype(jnp.float32).reshape(oh * ow, bk)
+    for i in range(fh):
+        for j in range(fw):
+            patch = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, bc),
+                (stride, stride, 1))                 # (oh, ow, bc)
+            o_ref[i, j, :, :] = jnp.dot(
+                patch.reshape(oh * ow, bc).astype(jnp.float32).T, g,
+                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bk", "stride",
+                                             "interpret"))
+def conv2d_wgrad_block(x: jax.Array, g: jax.Array, *, bc: int, bk: int,
+                       stride: int = 1, interpret: bool = False
+                       ) -> jax.Array:
+    """dW partial for one spatial tile: x (IH, IW, C) includes the halo,
+    g (OH, OW, K) is the matching cotangent tile.  Returns fp32
+    (Fh, Fw, C, K); the caller accumulates across tiles and batch."""
+    ih, iw, c = x.shape
+    oh, ow, k = g.shape
+    fh = ih - (oh - 1) * stride
+    fw = iw - (ow - 1) * stride
+    assert fh >= 1 and fw >= 1, (x.shape, g.shape, stride)
+    assert c % bc == 0 and k % bk == 0, (c, bc, k, bk)
+    grid = (k // bk, c // bc)
+    return pl.pallas_call(
+        functools.partial(_wgrad_kernel, fh=fh, fw=fw, oh=oh, ow=ow,
+                          stride=stride),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ih, iw, bc), lambda kk, cc: (0, 0, cc)),
+            pl.BlockSpec((oh, ow, bk), lambda kk, cc: (0, 0, kk)),
+        ],
+        out_specs=pl.BlockSpec((fh, fw, bc, bk),
+                               lambda kk, cc: (0, 0, cc, kk)),
+        out_shape=jax.ShapeDtypeStruct((fh, fw, c, k), jnp.float32),
+        interpret=interpret,
+    )(x, g)
+
+
+def conv2d_wgrad(x: jax.Array, g: jax.Array, fh: int, fw: int,
+                 stride: int = 1,
+                 tiles: tuple[int, int, int, int] | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """dW[Fh,Fw,C,K] for y = conv2d(x, w, stride), NHWC cotangent g.
+
+    Level-1 spatial tiles reduce into the host fp32 accumulator; level-0
+    channel blocking runs inside the Pallas kernel.  Tiles come from the
+    ``"conv2d_wgrad"`` schedule; ragged channel tiles take the oracle.
+    """
+    from repro.tune import best_schedule
+
+    n, h, wd, c = x.shape
+    _, oh, ow, k = g.shape
+    bx, by, bc, bk = tiles or best_schedule(
+        "conv2d_wgrad", (ow, oh, c, k, fw, fh), g.dtype.name,
+        stride=stride).tiles
+    if c % bc or k % bk:
+        return ref.conv2d_wgrad_ref(x, g, (fh, fw, c, k), stride)
+    # forward only reads the stride-reachable interior; clip the remainder
+    x = x[:, :(oh - 1) * stride + fh, :(ow - 1) * stride + fw, :]
+    if oh % by or ow % bx:
+        by, bx = oh, ow  # ragged spatial: single tile
+
+    def one_image(acc, xg):
+        img, gi = xg
+        for ty in range(0, oh, by):
+            for tx in range(0, ow, bx):
+                xt = jax.lax.dynamic_slice(
+                    img, (ty * stride, tx * stride, 0),
+                    ((by - 1) * stride + fh, (bx - 1) * stride + fw, c))
+                gt = jax.lax.dynamic_slice(gi, (ty, tx, 0), (by, bx, k))
+                acc += conv2d_wgrad_block(xt, gt, bc=bc, bk=bk,
+                                          stride=stride,
+                                          interpret=interpret)
+        return acc, None
+
+    # scan, not vmap+sum: one live fp32 dW carry instead of N partials
+    init = jnp.zeros((fh, fw, c, k), jnp.float32)
+    acc, _ = jax.lax.scan(one_image, init, (x, g))
+    return acc
+
+
+def conv2d_dgrad(g: jax.Array, w: jax.Array,
+                 x_shape: tuple[int, ...], stride: int = 1,
+                 tiles: tuple[int, int, int, int] | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """dX[N,H,W,C] for y = conv2d(x, w, stride), NHWC cotangent g.
+
+    Host side: dilate g by the stride, pad by the filter minus one, and
+    rotate/transpose the weights; the remaining work is a stride-1 direct
+    conv with (K -> C) channels, run through the forward Pallas kernel
+    under the ``"conv2d_dgrad"`` schedule key.
+    """
+    from repro.tune import best_schedule
+
+    n, h, wd, c = x_shape
+    fh, fw, _, k = w.shape
+    _, oh, ow, _ = g.shape
+    if stride > 1:  # transposed conv: input dilation
+        gd = jnp.zeros((n, (oh - 1) * stride + 1, (ow - 1) * stride + 1, k),
+                       g.dtype)
+        gd = gd.at[:, ::stride, ::stride, :].set(g)
+    else:
+        gd = g
+    gp = jnp.pad(gd, ((0, 0), (fh - 1, fh - 1), (fw - 1, fw - 1), (0, 0)))
+    w_t = w[::-1, ::-1].transpose(0, 1, 3, 2)        # (Fh, Fw, K, C)
+    oh_d = (oh - 1) * stride + fh                    # == H minus remainder
+    ow_d = (ow - 1) * stride + fw
+    bx, by, bc, bk = tiles or best_schedule(
+        "conv2d_dgrad", (ow_d, oh_d, k, c, fw, fh), g.dtype.name).tiles
+    if k % bc or c % bk:
+        return ref.conv2d_dgrad_ref(g, w, x_shape, stride)
+    per_image = functools.partial(conv2d_tiled, w=w_t, bx=bx, by=by,
+                                  bc=bc, bk=bk, stride=1,
+                                  interpret=interpret)
+    dx = jax.vmap(per_image)(gp)                     # (N, oh_d, ow_d, C)
+    # rows/cols the strided forward never read have zero gradient
+    return jnp.pad(dx, ((0, 0), (0, h - oh_d), (0, wd - ow_d), (0, 0)))

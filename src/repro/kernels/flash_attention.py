@@ -20,12 +20,39 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+BIG = 1e30  # lse sentinel for fully-masked rows: exp(s - BIG) == 0
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def attention_mask(qi, ki, *, block_q: int, block_kv: int, causal: bool,
+                   window: int | None, kv_offset: int):
+    """Valid-position mask for one (q-block, kv-block) tile.
+
+    The single definition shared by the forward kernel and the backward
+    recompute kernels (``flash_attention_bwd``) — they must stay
+    bit-identical or the VJP differentiates a different attention
+    pattern than the forward computes.
+    """
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + kv_offset
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = jnp.ones((block_q, block_kv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
                   scale: float, causal: bool, window: int | None,
                   logit_cap: float | None, block_q: int, block_kv: int,
-                  n_kv: int, kv_offset: int):
+                  n_kv: int, kv_offset: int, with_lse: bool = False):
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref = None
+        m_ref, l_ref, acc_ref = rest
     qi = pl.program_id(0)
     ki = pl.program_id(1)
 
@@ -42,15 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     if logit_cap is not None:
         s = logit_cap * jnp.tanh(s / logit_cap)
 
-    qpos = qi * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_kv), 0) + kv_offset
-    kpos = ki * block_kv + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_kv), 1)
-    mask = jnp.ones((block_q, block_kv), dtype=bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
+    mask = attention_mask(qi, ki, block_q=block_q, block_kv=block_kv,
+                          causal=causal, window=window, kv_offset=kv_offset)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]                              # (bq, 1)
@@ -72,6 +92,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
         o_ref[...] = (acc_ref[...] / safe_l).astype(o_ref.dtype)
+        if with_lse:
+            lse_ref[...] = jnp.where(l == 0.0, BIG,
+                                     m_ref[...] + jnp.log(safe_l))
 
 
 def _blocked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -79,8 +102,8 @@ def _blocked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  logit_cap: float | None, block_kv: int) -> jax.Array:
     """Streaming-softmax attention in pure jnp (lax.scan over KV chunks,
     per-chunk checkpointing) — differentiable with O(Sq * block_kv) live
-    memory.  Used as the backward path of the Pallas kernel and as an
-    oracle for long sequences."""
+    memory.  The ``REPRO_REF_ATTENTION=blocked`` roofline path and the
+    long-sequence oracle for the Pallas kernels (fwd and bwd)."""
     sq, d = q.shape
     skv = k.shape[0]
     block_kv = min(block_kv, skv)
@@ -127,25 +150,27 @@ def _blocked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 @functools.lru_cache(maxsize=64)
 def _make_differentiable(causal, window, logit_cap, block_q, block_kv,
                          interpret):
-    """Pallas forward + blocked-jnp backward (recompute, flash-style)."""
+    """Pallas forward + Pallas recompute backward (flash-style).
 
-    def ref_fn(q, k, v):
-        return _blocked_ref(q, k, v, causal=causal, window=window,
-                            logit_cap=logit_cap, block_kv=block_kv)
+    The forward saves (o, lse) as residuals; the backward runs the two
+    Pallas kernels in ``flash_attention_bwd`` (dq over the KV grid,
+    dk/dv over the Q grid) — see docs/training.md.
+    """
+    kw = dict(causal=causal, window=window, logit_cap=logit_cap,
+              block_q=block_q, block_kv=block_kv, interpret=interpret)
 
     @jax.custom_vjp
     def fn(q, k, v):
-        return _flash_forward(q, k, v, causal=causal, window=window,
-                              logit_cap=logit_cap, block_q=block_q,
-                              block_kv=block_kv, interpret=interpret)
+        return _flash_forward(q, k, v, **kw)
 
     def fwd(q, k, v):
-        return fn(q, k, v), (q, k, v)
+        o, lse = _flash_forward(q, k, v, return_lse=True, **kw)
+        return o, (q, k, v, o, lse)
 
     def bwd(res, g):
-        q, k, v = res
-        _, vjp = jax.vjp(ref_fn, q, k, v)
-        return vjp(g)
+        from repro.kernels.flash_attention_bwd import flash_attention_bwd
+        q, k, v, o, lse = res
+        return flash_attention_bwd(q, k, v, o, lse, g, **kw)
 
     fn.defvjp(fwd, bwd)
     return fn
@@ -156,7 +181,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     logit_cap: float | None = None,
                     block_q: int = 128, block_kv: int = 128,
                     interpret: bool = False) -> jax.Array:
-    """Differentiable flash attention (Pallas fwd, blocked-jnp bwd)."""
+    """Differentiable flash attention (Pallas fwd AND Pallas bwd)."""
     fn = _make_differentiable(causal, window, logit_cap,
                               min(block_q, q.shape[0]),
                               min(block_kv, k.shape[0]), interpret)
@@ -164,12 +189,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "logit_cap", "block_q", "block_kv", "interpret"))
+    "causal", "window", "logit_cap", "block_q", "block_kv", "interpret",
+    "return_lse"))
 def _flash_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    causal: bool = True, window: int | None = None,
                    logit_cap: float | None = None,
                    block_q: int = 128, block_kv: int = 128,
-                   interpret: bool = False) -> jax.Array:
+                   interpret: bool = False, return_lse: bool = False):
     sq, d = q.shape
     skv = k.shape[0]
     block_q = min(block_q, sq)
@@ -178,19 +204,27 @@ def _flash_forward(q: jax.Array, k: jax.Array, v: jax.Array, *,
         (sq, block_q, skv, block_kv)
     grid = (sq // block_q, skv // block_kv)
     scale = d ** -0.5
+    o_spec = pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0))
+    o_shape = jax.ShapeDtypeStruct((sq, d), q.dtype)
+    out_specs, out_shape = o_spec, o_shape
+    if return_lse:  # the backward's residual: lse = m + log(l), per row
+        out_specs = [o_spec,
+                     pl.BlockSpec((block_q, 1), lambda qi, ki: (qi, 0))]
+        out_shape = [o_shape,
+                     jax.ShapeDtypeStruct((sq, 1), jnp.float32)]
     return pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=scale, causal=causal, window=window,
             logit_cap=logit_cap, block_q=block_q, block_kv=block_kv,
-            n_kv=grid[1], kv_offset=skv - sq),
+            n_kv=grid[1], kv_offset=skv - sq, with_lse=return_lse),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0)),
             pl.BlockSpec((block_kv, d), lambda qi, ki: (ki, 0)),
             pl.BlockSpec((block_kv, d), lambda qi, ki: (ki, 0)),
         ],
-        out_specs=pl.BlockSpec((block_q, d), lambda qi, ki: (qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
             pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l

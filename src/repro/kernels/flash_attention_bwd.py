@@ -1,0 +1,161 @@
+"""Backward Pallas kernels for the streaming-softmax attention.
+
+Flash-style recompute backward: the forward saves only the output ``o``
+and the per-row log-sum-exp ``lse = m + log(l)``; the backward replays
+each (q-block, kv-block) tile's scores in VMEM and accumulates
+
+* ``dq`` over the KV loop (grid (nq, nkv), KV minor — the dq block is
+  the OB resident across the reduction), and
+* ``dk``/``dv`` over the Q loop (grid (nkv, nq), Q minor — the dk/dv
+  blocks are the OB),
+
+so nothing quadratic in sequence length ever exists in HBM.  In the
+paper's vocabulary both passes are the same blocked nest as the forward
+with the roles of the operands rotated; the (block_q, block_kv) tiles
+are shared with the forward (``core.tpu_adapter.flash_tiles``).
+
+``p = exp(s - lse)`` reconstructs the exact forward probabilities, and
+``delta = rowsum(do * o)`` (computed host-side, O(S)) supplies the
+softmax-jacobian correction ``ds = p * (dp - delta)``.  Gemma-2 logit
+soft-capping backpropagates through ``d/ds cap*tanh(s/cap) = 1 - t^2``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF, attention_mask
+
+
+def _block_ds(q, k, v, g, lse, delta, qi, ki, *, scale, causal, window,
+              logit_cap, block_q, block_kv, kv_offset):
+    """Recompute one tile's p and ds (both fp32, masked)."""
+    s_pre = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        t = jnp.tanh(s_pre / logit_cap)
+        s = logit_cap * t
+    else:
+        s = s_pre
+    mask = attention_mask(qi, ki, block_q=block_q, block_kv=block_kv,
+                          causal=causal, window=window,
+                          kv_offset=kv_offset)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)       # (bq, bkv)
+    dp = jnp.dot(g, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    if logit_cap is not None:
+        ds = ds * (1.0 - t * t)                      # through the softcap
+    return p, ds
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, causal, window, logit_cap, block_q,
+               block_kv, n_kv, kv_offset):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _, ds = _block_ds(
+        q_ref[...].astype(jnp.float32), k_ref[...].astype(jnp.float32),
+        v_ref[...].astype(jnp.float32), g_ref[...].astype(jnp.float32),
+        lse_ref[...], delta_ref[...], qi, ki, scale=scale, causal=causal,
+        window=window, logit_cap=logit_cap, block_q=block_q,
+        block_kv=block_kv, kv_offset=kv_offset)
+    acc_ref[...] += jnp.dot(ds, k_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        dq_ref[...] = (acc_ref[...] * scale).astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, g_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, window,
+                logit_cap, block_q, block_kv, n_q, kv_offset):
+    ki = pl.program_id(0)
+    qi = pl.program_id(1)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    p, ds = _block_ds(
+        q, k_ref[...].astype(jnp.float32),
+        v_ref[...].astype(jnp.float32), g,
+        lse_ref[...], delta_ref[...], qi, ki, scale=scale, causal=causal,
+        window=window, logit_cap=logit_cap, block_q=block_q,
+        block_kv=block_kv, kv_offset=kv_offset)
+    dv_acc[...] += jnp.dot(p.T, g, preferred_element_type=jnp.float32)
+    dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _done():
+        dk_ref[...] = (dk_acc[...] * scale).astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_cap", "block_q", "block_kv", "interpret"))
+def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        o: jax.Array, lse: jax.Array, g: jax.Array, *,
+                        causal: bool, window: int | None,
+                        logit_cap: float | None, block_q: int,
+                        block_kv: int, interpret: bool = False):
+    """(dq, dk, dv) for one head.  lse: (Sq, 1) fp32 from the forward."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, \
+        (sq, block_q, skv, block_kv)
+    n_q, n_kv = sq // block_q, skv // block_kv
+    scale = d ** -0.5
+    kv_offset = skv - sq
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1, keepdims=True)          # (sq, 1)
+    common = dict(scale=scale, causal=causal, window=window,
+                  logit_cap=logit_cap, block_q=block_q, block_kv=block_kv,
+                  kv_offset=kv_offset)
+    q_spec = pl.BlockSpec((block_q, d), lambda a, b: (a, 0))
+    kv_spec = pl.BlockSpec((block_kv, d), lambda a, b: (b, 0))
+    row_spec = pl.BlockSpec((block_q, 1), lambda a, b: (a, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, n_kv=n_kv, **common),
+        grid=(n_q, n_kv),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=pl.BlockSpec((block_q, d), lambda a, b: (a, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, lse, delta)
+
+    # second pass: Q minor-most so the dk/dv blocks stay resident
+    q_spec2 = pl.BlockSpec((block_q, d), lambda a, b: (b, 0))
+    kv_spec2 = pl.BlockSpec((block_kv, d), lambda a, b: (a, 0))
+    row_spec2 = pl.BlockSpec((block_q, 1), lambda a, b: (b, 0))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, n_q=n_q, **common),
+        grid=(n_kv, n_q),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2,
+                  row_spec2],
+        out_specs=[pl.BlockSpec((block_kv, d), lambda a, b: (a, 0)),
+                   pl.BlockSpec((block_kv, d), lambda a, b: (a, 0))],
+        out_shape=[jax.ShapeDtypeStruct((skv, d), k.dtype),
+                   jax.ShapeDtypeStruct((skv, d), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_kv, d), jnp.float32),
+                        pltpu.VMEM((block_kv, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, lse, delta)
+    return dq, dk, dv

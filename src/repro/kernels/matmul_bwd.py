@@ -1,0 +1,111 @@
+"""Backward (dgrad) Pallas kernels for the blocked GEMM.
+
+For ``C[M,N] = A[M,K] @ B[K,N]`` the two cotangents are themselves GEMMs
+over the same data, just with one operand read transposed:
+
+* ``dA[M,K] = g[M,N] @ B[K,N]^T``  — an NT GEMM (reduction over N);
+* ``dB[K,N] = A[M,K]^T @ g[M,N]``  — a TN GEMM (reduction over M).
+
+Both are lowered here as first-class Pallas kernels: the transposed
+operand is *accessed* transposed via the BlockSpec index map plus an
+in-register ``.T`` on the VMEM tile, never materialized in HBM.  Each
+nest is the paper's GEMM loop nest with relabelled dims, so its schedule
+comes from the same blocking optimizer under the op key
+``"matmul_dgrad"`` with dims in the standard (M_out, N_out, K_reduce)
+convention of the output being produced (see ``repro.tune.schedule``).
+
+Grid order mirrors the forward kernel: reduction minor-most so the fp32
+accumulator (the paper's OB) stays VMEM-resident across it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.matmul_blocked import vmem_bytes_required
+
+__all__ = ["matmul_dgrad_a", "matmul_dgrad_b", "vmem_bytes_required"]
+
+# dgrad tiles stream two operand blocks and hold one fp32 accumulator,
+# exactly like the forward kernel: the footprint model is shared.
+
+
+def _dgrad_a_kernel(g_ref, b_ref, o_ref, acc_ref, *, n_r: int):
+    """dA tile += g_tile @ b_tile.T (reduction over the N tiles)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(g_ref[...], b_ref[...].T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_r - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "br", "bo", "interpret"))
+def matmul_dgrad_a(g: jax.Array, b: jax.Array, *, bm: int, br: int, bo: int,
+                   interpret: bool = False) -> jax.Array:
+    """dA[M,K] = g[M,N] @ B[K,N]^T, tiled (bm rows, br of N, bo of K)."""
+    m, n = g.shape
+    k, n2 = b.shape
+    assert n == n2, (g.shape, b.shape)
+    assert m % bm == 0 and n % br == 0 and k % bo == 0, \
+        f"dgrad-A tiles ({bm},{br},{bo}) must divide ({m},{n},{k})"
+    grid = (m // bm, k // bo, n // br)
+    return pl.pallas_call(
+        functools.partial(_dgrad_a_kernel, n_r=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, br), lambda i, j, r: (i, r)),
+            pl.BlockSpec((bo, br), lambda i, j, r: (j, r)),
+        ],
+        out_specs=pl.BlockSpec((bm, bo), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bo), jnp.float32)],
+        interpret=interpret,
+    )(g, b)
+
+
+def _dgrad_b_kernel(a_ref, g_ref, o_ref, acc_ref, *, n_r: int):
+    """dB tile += a_tile.T @ g_tile (reduction over the M tiles)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].T, g_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_r - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "br", "bn", "interpret"))
+def matmul_dgrad_b(a: jax.Array, g: jax.Array, *, bk: int, br: int, bn: int,
+                   interpret: bool = False) -> jax.Array:
+    """dB[K,N] = A[M,K]^T @ g[M,N], tiled (bk of K, br of M, bn of N)."""
+    m, k = a.shape
+    m2, n = g.shape
+    assert m == m2, (a.shape, g.shape)
+    assert k % bk == 0 and m % br == 0 and n % bn == 0, \
+        f"dgrad-B tiles ({bk},{br},{bn}) must divide ({k},{m},{n})"
+    grid = (k // bk, n // bn, m // br)
+    return pl.pallas_call(
+        functools.partial(_dgrad_b_kernel, n_r=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bk), lambda i, j, r: (r, i)),
+            pl.BlockSpec((br, bn), lambda i, j, r: (r, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, g)

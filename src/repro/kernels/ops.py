@@ -1,4 +1,4 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels — differentiable.
 
 Each op (a) asks the schedule autotuner (``repro.tune.best_schedule``)
 for its VMEM tiles — a tuned, persisted schedule when one is cached for
@@ -7,10 +7,24 @@ winner — (b) runs the Pallas kernel when shapes tile cleanly, and
 (c) falls back to the jnp oracle otherwise — so models can use these ops
 unconditionally.  ``interpret`` defaults to True off-TPU (kernel body
 executed in Python for correctness validation on CPU).
+
+Every op carries a ``jax.custom_vjp``: the backward nests are Pallas
+kernels too (``matmul_bwd`` / ``conv2d_bwd`` / ``flash_attention_bwd``),
+each lowered through the same tune pipeline under its own schedule key
+(``"matmul_dgrad"``, ``"conv2d_dgrad"``, ``"conv2d_wgrad"``), with jnp
+oracle fallbacks for ragged shapes — so ``jax.grad`` through a model
+built on these ops takes real training steps through blocked kernels.
+
+``linear`` is the training-path entry: a plain ``x @ w`` unless blocked
+linears are enabled (``blocked_linear(True)`` context or the
+``REPRO_BLOCKED_LINEAR`` env var), in which case it routes through the
+differentiable blocked GEMM.
 """
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
 import os
 
@@ -19,9 +33,11 @@ import jax.numpy as jnp
 
 from repro.core.tpu_adapter import flash_tiles
 from repro.kernels import ref
-from repro.kernels.conv2d_blocked import conv2d_block
+from repro.kernels.conv2d_bwd import conv2d_dgrad, conv2d_wgrad
+from repro.kernels.conv2d_blocked import conv2d_tiled
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul_blocked import matmul_blocked
+from repro.kernels.matmul_bwd import matmul_dgrad_a, matmul_dgrad_b
 from repro.tune import best_schedule
 
 
@@ -29,28 +45,109 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def matmul(a: jax.Array, b: jax.Array,
-           tiles: tuple[int, int, int] | None = None,
-           interpret: bool | None = None) -> jax.Array:
-    """Blocked GEMM with tuned/model-derived tiles; oracle fallback."""
+# ------------------------------- matmul ------------------------------------
+
+
+def _matmul_fwd_impl(a, b, tiles, interpret):
     m, k = a.shape
     _, n = b.shape
     bm, bk, bn = tiles or best_schedule("matmul", (m, n, k),
                                         a.dtype.name).tiles
     if m % bm or k % bk or n % bn:
         return ref.matmul_ref(a, b)
-    interpret = default_interpret() if interpret is None else interpret
     return matmul_blocked(a, b, bm=bm, bk=bk, bn=bn, interpret=interpret)
 
 
-def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
-           tiles: tuple[int, int, int, int] | None = None,
-           interpret: bool | None = None) -> jax.Array:
-    """Direct blocked conv, NHWC x HWIO -> NHWC (VALID padding).
+def _matmul_da(g, b, interpret):
+    """dA[M,K] = g[M,N] @ B^T under the "matmul_dgrad" schedule."""
+    m, n = g.shape
+    k = b.shape[0]
+    # dims in (M_out, N_out, K_reduce) convention of the dA nest
+    bm, br, bo = best_schedule("matmul_dgrad", (m, k, n), g.dtype.name).tiles
+    if m % bm or n % br or k % bo:
+        return jnp.dot(g, b.T, preferred_element_type=jnp.float32)
+    return matmul_dgrad_a(g, b, bm=bm, br=br, bo=bo, interpret=interpret)
 
-    Level-1 spatial blocking (halo slices from HBM) happens here; level-0
-    channel/kernel blocking happens inside the Pallas kernel.
+
+def _matmul_db(a, g, interpret):
+    """dB[K,N] = A^T @ g[M,N] under the "matmul_dgrad" schedule."""
+    m, k = a.shape
+    n = g.shape[1]
+    bk, br, bn = best_schedule("matmul_dgrad", (k, n, m), g.dtype.name).tiles
+    if k % bk or m % br or n % bn:
+        return jnp.dot(a.T, g, preferred_element_type=jnp.float32)
+    return matmul_dgrad_b(a, g, bk=bk, br=br, bn=bn, interpret=interpret)
+
+
+@functools.lru_cache(maxsize=256)
+def _matmul_vjp(tiles, interpret):
+    @jax.custom_vjp
+    def fn(a, b):
+        return _matmul_fwd_impl(a, b, tiles, interpret)
+
+    def fwd(a, b):
+        return fn(a, b), (a, b)
+
+    def bwd(res, g):
+        a, b = res
+        return (_matmul_da(g, b, interpret).astype(a.dtype),
+                _matmul_db(a, g, interpret).astype(b.dtype))
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def matmul(a: jax.Array, b: jax.Array,
+           tiles: tuple[int, int, int] | None = None,
+           interpret: bool | None = None) -> jax.Array:
+    """Blocked GEMM with tuned/model-derived tiles; oracle fallback.
+
+    Differentiable: the VJP runs the NT/TN dgrad Pallas kernels with
+    their own tuned schedules (explicit ``tiles`` pin the forward only).
     """
+    interpret = default_interpret() if interpret is None else interpret
+    return _matmul_vjp(tuple(tiles) if tiles else None, interpret)(a, b)
+
+
+# ------------------------------- linear ------------------------------------
+
+_BLOCKED_LINEAR: contextvars.ContextVar[bool | None] = \
+    contextvars.ContextVar("repro_blocked_linear", default=None)
+
+
+def blocked_linear_enabled() -> bool:
+    v = _BLOCKED_LINEAR.get()
+    if v is None:
+        return os.environ.get("REPRO_BLOCKED_LINEAR") == "1"
+    return v
+
+
+@contextlib.contextmanager
+def blocked_linear(enable: bool = True):
+    """Route model projections (``ops.linear``) through the blocked,
+    custom-VJP GEMM while tracing under this context."""
+    tok = _BLOCKED_LINEAR.set(bool(enable))
+    try:
+        yield
+    finally:
+        _BLOCKED_LINEAR.reset(tok)
+
+
+def linear(x: jax.Array, w: jax.Array,
+           interpret: bool | None = None) -> jax.Array:
+    """Projection ``x @ w`` for any-rank x; blocked + differentiable when
+    blocked linears are enabled (see :func:`blocked_linear`)."""
+    if not blocked_linear_enabled():
+        return x @ w
+    lead = x.shape[:-1]
+    out = matmul(x.reshape(-1, x.shape[-1]), w, interpret=interpret)
+    return out.reshape(*lead, w.shape[-1])
+
+
+# -------------------------------- conv2d -----------------------------------
+
+
+def _conv2d_fwd_impl(x, w, stride, tiles, interpret):
     n, h, wd, c = x.shape
     fh, fw, _, k = w.shape
     oh = (h - fh) // stride + 1
@@ -59,30 +156,47 @@ def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
         "conv2d", (ow, oh, c, k, fw, fh), x.dtype.name, stride=stride).tiles
     if c % bc or k % bk:
         return ref.conv2d_ref(x, w, stride)
-    interpret = default_interpret() if interpret is None else interpret
-
-    per_image = functools.partial(_conv_one, w=w, stride=stride, bx=bx,
-                                  by=by, bc=bc, bk=bk, oh=oh, ow=ow,
-                                  fh=fh, fw=fw, interpret=interpret)
+    per_image = functools.partial(conv2d_tiled, w=w, bx=bx, by=by, bc=bc,
+                                  bk=bk, stride=stride, interpret=interpret)
     return jax.vmap(per_image)(x)
 
 
-def _conv_one(img, *, w, stride, bx, by, bc, bk, oh, ow, fh, fw, interpret):
-    # level-1 spatial tiles with halo (paper's X1/Y1 loops)
-    if oh % by or ow % bx:
-        by, bx = oh, ow  # ragged spatial: single tile
-    rows = []
-    for ty in range(0, oh, by):
-        cols = []
-        for tx in range(0, ow, bx):
-            tile = jax.lax.dynamic_slice(
-                img, (ty * stride, tx * stride, 0),
-                ((by - 1) * stride + fh, (bx - 1) * stride + fw,
-                 img.shape[2]))
-            cols.append(conv2d_block(tile, w, bc=bc, bk=bk, stride=stride,
-                                     interpret=interpret))
-        rows.append(jnp.concatenate(cols, axis=1))
-    return jnp.concatenate(rows, axis=0)
+@functools.lru_cache(maxsize=256)
+def _conv2d_vjp(stride, tiles, interpret):
+    @jax.custom_vjp
+    def fn(x, w):
+        return _conv2d_fwd_impl(x, w, stride, tiles, interpret)
+
+    def fwd(x, w):
+        return fn(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        fh, fw = w.shape[0], w.shape[1]
+        dx = conv2d_dgrad(g, w, x.shape, stride=stride, interpret=interpret)
+        dw = conv2d_wgrad(x, g, fh, fw, stride=stride, interpret=interpret)
+        return dx.astype(x.dtype), dw.astype(w.dtype)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           tiles: tuple[int, int, int, int] | None = None,
+           interpret: bool | None = None) -> jax.Array:
+    """Direct blocked conv, NHWC x HWIO -> NHWC (VALID padding).
+
+    Level-1 spatial blocking (halo slices from HBM) happens outside the
+    kernel; level-0 channel/kernel blocking inside.  Differentiable: the
+    VJP runs the wgrad Pallas kernel and the transposed-conv dgrad under
+    the ``"conv2d_wgrad"`` / ``"conv2d_dgrad"`` schedule keys.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    return _conv2d_vjp(stride, tuple(tiles) if tiles else None,
+                       interpret)(x, w)
+
+
+# ------------------------------- attention ---------------------------------
 
 
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

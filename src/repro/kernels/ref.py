@@ -46,6 +46,25 @@ def conv2d_im2col(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
     return out.astype(x.dtype)
 
 
+def conv2d_wgrad_ref(x: jax.Array, g: jax.Array,
+                     w_shape: tuple[int, ...], stride: int = 1
+                     ) -> jax.Array:
+    """Oracle dW for ``conv2d_ref``: the transpose of the (linear) forward
+    map w -> conv(x, w), evaluated on the cotangent g."""
+    zero_w = jnp.zeros(w_shape, g.dtype)
+    _, vjp = jax.vjp(lambda w: conv2d_ref(x, w, stride), zero_w)
+    return vjp(g)[0]
+
+
+def conv2d_dgrad_ref(g: jax.Array, w: jax.Array,
+                     x_shape: tuple[int, ...], stride: int = 1
+                     ) -> jax.Array:
+    """Oracle dX for ``conv2d_ref``: transpose of x -> conv(x, w)."""
+    zero_x = jnp.zeros(x_shape, g.dtype)
+    _, vjp = jax.vjp(lambda x: conv2d_ref(x, w, stride), zero_x)
+    return vjp(g)[0]
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                   causal: bool = True, scale: float | None = None,
                   logit_cap: float | None = None,

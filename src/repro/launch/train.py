@@ -36,6 +36,10 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--blocked-kernels", action="store_true",
+                    help="route projections through the differentiable "
+                         "blocked Pallas GEMMs (fwd + tuned dgrad "
+                         "schedules; interpret mode off-TPU)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--restore", choices=["auto", "none"], default="none")
@@ -55,6 +59,7 @@ def main() -> None:
                         total_steps=args.steps),
         grad_accum=args.grad_accum,
         compress_grads=args.compress_grads,
+        blocked_linear=args.blocked_kernels,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
 
     def batches():

@@ -101,14 +101,14 @@ def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
     """Full-sequence attention.  x: (B, S, D)."""
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = (x @ params["wq"]).reshape(b, s, hq, hd)
-    k = (x @ params["wk"]).reshape(b, s, hkv, hd)
-    v = (x @ params["wv"]).reshape(b, s, hkv, hd)
+    q = ops.linear(x, params["wq"]).reshape(b, s, hq, hd)
+    k = ops.linear(x, params["wk"]).reshape(b, s, hkv, hd)
+    v = ops.linear(x, params["wv"]).reshape(b, s, hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     out = ops.attention(q, k, v, causal=causal, window=window,
                         logit_cap=cfg.attn_logit_cap)
-    out = out.reshape(b, s, hq * hd) @ params["wo"]
+    out = ops.linear(out.reshape(b, s, hq * hd), params["wo"])
     if not return_cache:
         return out
     cache_len = return_cache if isinstance(return_cache, int) and \
@@ -208,13 +208,16 @@ def mlp_defs(cfg: ModelConfig, model_ax: int) -> dict:
 
 
 def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
-    u = (x @ params["w_up"]).astype(jnp.float32)
+    # ops.linear is a plain matmul unless blocked linears are enabled
+    # (training with tc.blocked_linear / REPRO_BLOCKED_LINEAR), in which
+    # case fwd AND bwd run the tuned Pallas GEMM kernels.
+    u = ops.linear(x, params["w_up"]).astype(jnp.float32)
     if "w_gate" in params:  # SwiGLU
-        g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        g = jax.nn.silu(ops.linear(x, params["w_gate"]).astype(jnp.float32))
         u = g * u
     else:  # plain GELU MLP (granite-34b, seamless encoder/decoder)
         u = jax.nn.gelu(u)
-    return u.astype(x.dtype) @ params["w_down"]
+    return ops.linear(u.astype(x.dtype), params["w_down"])
 
 
 # ============================ MoE (top-k) ==================================

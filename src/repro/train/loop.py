@@ -34,18 +34,27 @@ class TrainConfig:
     ckpt_every: int = 100
     log_every: int = 10
     straggler_factor: float = 3.0  # step slower than 3x median -> warn
+    blocked_linear: bool = False   # projections through the blocked,
+    #   custom-VJP Pallas GEMMs (fwd + dgrad kernels with tuned
+    #   schedules); off by default — XLA's native dot is the baseline
 
 
-def make_loss(cfg: ModelConfig) -> Callable:
+def make_loss(cfg: ModelConfig, tc: TrainConfig | None = None) -> Callable:
+    blocked = bool(tc and tc.blocked_linear)
+
     def loss(params, batch):
-        total, metrics = T.loss_fn(cfg, params, batch)
+        from repro.kernels import ops
+        # the toggle must be live while this fn is TRACED (the branch in
+        # ops.linear is a Python-level one), hence inside the loss body
+        with ops.blocked_linear(blocked):
+            total, metrics = T.loss_fn(cfg, params, batch)
         return total, metrics
     return loss
 
 
 def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
     """(params, opt_state, batch) -> (params, opt_state, metrics)."""
-    loss = make_loss(cfg)
+    loss = make_loss(cfg, tc)
 
     def train_step(params, opt_state, batch):
         if tc.grad_accum > 1:

@@ -60,8 +60,11 @@ def best_schedule(op: str, dims: tuple[int, ...], dtype: str = "float32",
                   target: TpuTarget = TPU_V5E) -> Schedule:
     """Cached-or-derived schedule for one op instance (never measures).
 
-    ``dims`` is ``(M, N, K)`` for ``op="matmul"`` or output-space
-    ``(X, Y, C, K, Fw, Fh)`` for ``op="conv2d"``.  A cache hit (same op,
+    ``dims`` is ``(M, N, K)`` for the GEMM ops (``"matmul"``,
+    ``"matmul_dgrad"``) or output-space ``(X, Y, C, K, Fw, Fh)`` for the
+    conv ops (``"conv2d"``, ``"conv2d_dgrad"``, ``"conv2d_wgrad"``) —
+    see ``repro.tune.schedule`` for the backward dim conventions.  A
+    cache hit (same op,
     shapes, dtype and device kind) wins outright; otherwise the analytic
     top candidate is derived in-process (memoized, not persisted — run
     :func:`tune_op` to measure and persist).

@@ -23,10 +23,13 @@ from repro.tune import (OpSpec, ScheduleCache, describe_candidates,
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(prog="python -m repro.tune",
                                  description=__doc__)
-    ap.add_argument("op", choices=("matmul", "conv2d"))
+    from repro.tune.schedule import OPS
+    ap.add_argument("op", choices=OPS)
     ap.add_argument("dims", type=int, nargs="+",
-                    help="matmul: M N K; conv2d: X Y C K Fw Fh "
-                         "(output-space X/Y)")
+                    help="GEMM ops (matmul, matmul_dgrad): M N K; conv "
+                         "ops (conv2d, conv2d_dgrad, conv2d_wgrad): "
+                         "X Y C K Fw Fh (output-space X/Y; see "
+                         "docs/training.md for the backward conventions)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--stride", type=int, default=1)
     ap.add_argument("--top-n", type=int, default=3,

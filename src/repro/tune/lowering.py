@@ -12,6 +12,13 @@ This is the ``core -> kernels`` bridge the optimizer output flows through:
 3. :func:`predicted_dram_accesses` can score any candidate with the exact
    per-level access counts of paper §3.4 — the analytic rank the
    measurement harness then refines.
+
+Backward ops (``matmul_dgrad`` / ``conv2d_dgrad`` / ``conv2d_wgrad``)
+flow through the same three steps: their nests share the forward
+families' access geometry (the model counts element touches of the same
+three operands; which one is written does not change the counts), so the
+candidate search and scoring are reused with relabelled dims — see
+``core.tpu_adapter.backward_tile_candidates`` and docs/training.md.
 """
 
 from __future__ import annotations
@@ -19,22 +26,33 @@ from __future__ import annotations
 from repro.core.hierarchy import MemLevel, cache_accesses
 from repro.core.loopnest import BlockingString, Dim, Loop
 from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
+                                    backward_tile_candidates,
                                     conv_tile_candidates,
                                     default_vmem_budget,
                                     matmul_tile_candidates)
-from repro.tune.schedule import OpSpec, Schedule
+from repro.tune.schedule import GEMM_OPS, OpSpec, Schedule
 
 # the one budget rule, shared with the snap loops in core.tpu_adapter
 vmem_budget = default_vmem_budget
 
 
 def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
-    """Check a tile tuple against the kernel's own VMEM footprint model."""
-    if spec.op == "matmul":
+    """Check a tile tuple against the kernel's own VMEM footprint model.
+
+    Each kernel family owns its footprint accounting: the forward GEMM
+    model also covers the NT/TN dgrad kernels (same streamed-operands +
+    resident-accumulator layout), the forward conv model covers dgrad
+    (which runs the forward kernel), and the wgrad kernel has its own
+    (resident dW block, streamed input/cotangent tiles).
+    """
+    if spec.op in GEMM_OPS:
         from repro.kernels.matmul_blocked import vmem_bytes_required
         bm, bk, bn = tiles
         return vmem_bytes_required(bm, bk, bn, spec.itemsize) <= budget
-    from repro.kernels.conv2d_blocked import vmem_bytes_required
+    if spec.op == "conv2d_wgrad":
+        from repro.kernels.conv2d_bwd import vmem_bytes_required
+    else:
+        from repro.kernels.conv2d_blocked import vmem_bytes_required
     bx, by, bc, bk = tiles
     _, _, _, _, Fw, Fh = spec.dims
     return vmem_bytes_required(bx, by, bc, bk, Fh, Fw, spec.itemsize,
@@ -43,14 +61,14 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
 
 def divides(spec: OpSpec, tiles: tuple[int, ...]) -> bool:
     """True iff the kernels can run these tiles without a fallback path."""
-    if spec.op == "matmul":
+    if spec.op in GEMM_OPS:
         M, N, K = spec.dims
         bm, bk, bn = tiles
         return M % bm == 0 and K % bk == 0 and N % bn == 0
     X, Y, C, K, _, _ = spec.dims
     bx, by, bc, bk = tiles
     # bc/bk divisibility is a hard kernel assert; bx/by divisibility avoids
-    # the single-spatial-tile fallback in ops._conv_one.
+    # the single-spatial-tile fallback in the level-1 host loops.
     return C % bc == 0 and K % bk == 0 and X % bx == 0 and Y % by == 0
 
 
@@ -60,19 +78,37 @@ def schedule_to_string(spec: OpSpec,
 
     Loop order mirrors the kernels exactly (inner -> outer):
 
-    * matmul: level-0 (bk, bm, bn) VMEM block, then the grid (m, n, k)
-      with k minor-most (the fp32 accumulator is the OB held across C);
-    * conv2d: Fw/Fh window loops inside the block, the (bx, by, bc, bk)
-      VMEM block, then the kernel grid (k, c) with c minor-most, then the
-      spatial halo tiles ops.py slices on the host (X inside Y).
+    * matmul / matmul_dgrad: level-0 (bk, bm, bn) VMEM block, then the
+      grid (m, n, k) with k minor-most (the fp32 accumulator is the OB
+      held across C);
+    * conv2d / conv2d_dgrad: Fw/Fh window loops inside the block, the
+      (bx, by, bc, bk) VMEM block, then the kernel grid (k, c) with c
+      minor-most, then the spatial halo tiles the host slices (X inside
+      Y);
+    * conv2d_wgrad: the spatial tile is the *innermost* reduction (one
+      whole (bx, by) tile dots into the resident dW block per Fw/Fh
+      step), then the channel blocks, then the (k, c) grid, then the
+      host's spatial reduction tiles.
     """
     p = spec.problem()
     loops: list[Loop] = []
-    if spec.op == "matmul":
+    if spec.op in GEMM_OPS:
         M, N, K = spec.dims
         bm, bk, bn = tiles
         loops = [Loop(Dim.C, bk), Loop(Dim.X, bm), Loop(Dim.K, bn),
                  Loop(Dim.C, K), Loop(Dim.K, N), Loop(Dim.X, M)]
+    elif spec.op == "conv2d_wgrad":
+        X, Y, C, K, Fw, Fh = spec.dims
+        bx, by, bc, bk = tiles
+        loops = [Loop(Dim.X, bx), Loop(Dim.Y, by)]
+        if Fw > 1:
+            loops.append(Loop(Dim.FW, Fw))
+        if Fh > 1:
+            loops.append(Loop(Dim.FH, Fh))
+        loops += [Loop(Dim.C, bc), Loop(Dim.K, bk),
+                  Loop(Dim.C, C), Loop(Dim.K, K),
+                  Loop(Dim.X, X), Loop(Dim.Y, Y)]
+        return BlockingString(loops, p)
     else:
         X, Y, C, K, Fw, Fh = spec.dims
         bx, by, bc, bk = tiles
@@ -120,11 +156,15 @@ def candidates(spec: OpSpec,
         M, N, K = spec.dims
         raw = matmul_tile_candidates(M, N, K, spec.itemsize, budget,
                                      target, top=top)
-    else:
+    elif spec.op == "conv2d":
         X, Y, C, K, Fw, Fh = spec.dims
         raw = conv_tile_candidates(X, Y, C, K, Fw, Fh, spec.itemsize,
                                    budget, target, top=top,
                                    stride=spec.stride)
+    else:
+        raw = backward_tile_candidates(spec.op, spec.dims, spec.itemsize,
+                                       budget, target, top=top,
+                                       stride=spec.stride)
     usable = [t for t in raw
               if divides(spec, t) and fits_vmem(spec, t, budget)]
     if not usable:

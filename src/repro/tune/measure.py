@@ -22,11 +22,23 @@ def _block(x) -> None:
 
 
 def make_inputs(schedule: Schedule, seed: int = 0):
-    """Representative operand arrays for the schedule's OpSpec."""
+    """Representative operand arrays for the schedule's OpSpec.
+
+    Backward ops get the operands their kernels actually stream:
+    ``matmul_dgrad`` a cotangent (M, K_red) plus the transposed-read
+    operand (N_out, K_red); ``conv2d_wgrad`` an input image plus the
+    output-space cotangent.  ``conv2d_dgrad`` *is* a forward conv after
+    the host-side dilation, so it measures as one.
+    """
     import jax.numpy as jnp
 
     spec = schedule.spec
     rng = np.random.default_rng(seed)
+    if spec.op == "matmul_dgrad":
+        M, N, K = spec.dims
+        g = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
+        b = jnp.asarray(rng.normal(size=(N, K)), spec.dtype)
+        return g, b
     if spec.op == "matmul":
         M, N, K = spec.dims
         a = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
@@ -36,6 +48,9 @@ def make_inputs(schedule: Schedule, seed: int = 0):
     ih = (Y - 1) * spec.stride + Fh
     iw = (X - 1) * spec.stride + Fw
     x = jnp.asarray(rng.normal(size=(1, ih, iw, C)), spec.dtype)
+    if spec.op == "conv2d_wgrad":
+        g = jnp.asarray(rng.normal(size=(1, Y, X, K)) * 0.5, spec.dtype)
+        return x, g
     w = jnp.asarray(rng.normal(size=(Fh, Fw, C, K)) * 0.5, spec.dtype)
     return x, w
 
@@ -45,10 +60,24 @@ def run_once(schedule: Schedule, inputs, interpret: bool | None = None):
     from repro.kernels import ops
 
     spec = schedule.spec
-    if spec.op == "matmul":
+    interpret = ops.default_interpret() if interpret is None \
+        else bool(interpret)
+    if spec.op == "matmul_dgrad":
+        from repro.kernels.matmul_bwd import matmul_dgrad_a
+        g, b = inputs
+        bm, br, bo = schedule.tiles
+        out = matmul_dgrad_a(g, b, bm=bm, br=br, bo=bo,
+                             interpret=interpret)
+    elif spec.op == "matmul":
         a, b = inputs
         out = ops.matmul(a, b, tiles=schedule.tiles, interpret=interpret)
-    else:
+    elif spec.op == "conv2d_wgrad":
+        from repro.kernels.conv2d_bwd import conv2d_wgrad
+        x, g = inputs
+        out = conv2d_wgrad(x, g, spec.dims[5], spec.dims[4],
+                           stride=spec.stride, tiles=schedule.tiles,
+                           interpret=interpret)
+    else:  # conv2d and conv2d_dgrad (the latter is a forward nest)
         x, w = inputs
         out = ops.conv2d(x, w, stride=spec.stride, tiles=schedule.tiles,
                          interpret=interpret)

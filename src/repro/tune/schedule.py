@@ -7,6 +7,18 @@ the problem dimensions the kernels see:
 * ``conv2d``: ``dims = (X, Y, C, K, Fw, Fh)`` in the paper's output-space
   coordinates (X = output width, Y = output height), plus ``stride``.
 
+Backward nests are ops of the same two families — the paper's blocking
+analysis does not care which operand of the loop nest is written:
+
+* ``matmul_dgrad``: a GEMM; ``dims = (M, N, K)`` of the *cotangent*
+  output being produced (dA: ``(M, K_fwd, N_fwd)``; dB: ``(K_fwd,
+  N_fwd, M_fwd)``), tiles in the usual (bm, bk, bn) roles;
+* ``conv2d_dgrad``: the transposed conv as a direct conv — dims in *its*
+  output space with channels swapped (``(W, H, K_fwd, C_fwd, Fw, Fh)``,
+  stride 1 after host-side input dilation);
+* ``conv2d_wgrad``: the forward conv's dims verbatim; the (bx, by)
+  tiles block the spatial *reduction*, (bc, bk) the channel dims.
+
 A :class:`Schedule` is a concrete kernel configuration for that spec: the
 Pallas tile tuple (``(bm, bk, bn)`` or ``(bx, by, bc, bk)``), where it came
 from (``analytic`` / ``measured`` / ``cache`` / ``override``), the model's
@@ -22,8 +34,10 @@ import numpy as np
 
 from repro.core.loopnest import Problem
 
-OPS = ("matmul", "conv2d")
-TILE_RANK = {"matmul": 3, "conv2d": 4}
+GEMM_OPS = ("matmul", "matmul_dgrad")
+CONV_OPS = ("conv2d", "conv2d_dgrad", "conv2d_wgrad")
+OPS = GEMM_OPS + CONV_OPS
+TILE_RANK = {op: (3 if op in GEMM_OPS else 4) for op in OPS}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +52,7 @@ class OpSpec:
     def __post_init__(self):
         if self.op not in OPS:
             raise ValueError(f"unknown op {self.op!r}; expected one of {OPS}")
-        want = {"matmul": 3, "conv2d": 6}[self.op]
+        want = 3 if self.op in GEMM_OPS else 6
         if len(self.dims) != want:
             raise ValueError(
                 f"{self.op} expects {want} dims, got {self.dims}")
@@ -59,7 +73,7 @@ class OpSpec:
 
     def problem(self) -> Problem:
         """The spec as the paper's loop-nest Problem."""
-        if self.op == "matmul":
+        if self.op in GEMM_OPS:
             M, N, K = self.dims
             return Problem.gemm(M=M, N_cols=N, K_reduce=K,
                                 bytes_per_elem=self.itemsize)
@@ -69,7 +83,7 @@ class OpSpec:
 
     def key(self, device_kind: str) -> str:
         """Stable cache key: ``op/dims/dtype/device``."""
-        if self.op == "matmul":
+        if self.op in GEMM_OPS:
             M, N, K = self.dims
             shape = f"m{M}n{N}k{K}"
         else:

@@ -10,3 +10,12 @@ os.environ.setdefault(
     os.path.join(tempfile.mkdtemp(prefix="repro-tune-test-"),
                  "schedules.json"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # registered here (no pytest.ini/pyproject): `-m "not slow"` is the
+    # fast CI lane; the subprocess sharded-compile tests carry the marker
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess-spawning sharded-compile tests; excluded from "
+        "the fast lane (-m 'not slow'), run by the full CI lane")

@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# every case here spawns a subprocess that compiles sharded jax programs
+# (minutes, not seconds): fast-lane runs skip them with -m "not slow"
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

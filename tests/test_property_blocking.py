@@ -110,6 +110,77 @@ def test_energy_positive_and_finite(data):
     assert all(v >= 0 for v in rep.per_buffer_pj.values())
 
 
+# -------- backward-op schedules (ISSUE 2: the training nests) --------------
+
+
+@st.composite
+def backward_spec(draw):
+    """A random backward OpSpec the tune pipeline must produce valid
+    schedules for."""
+    from repro.tune import OpSpec
+    op = draw(st.sampled_from(["matmul_dgrad", "conv2d_dgrad",
+                               "conv2d_wgrad"]))
+    if op == "matmul_dgrad":
+        dims = (draw(st.sampled_from([8, 64, 96, 256])),
+                draw(st.sampled_from([32, 128, 384])),
+                draw(st.sampled_from([16, 64, 512])))
+        return OpSpec(op, dims)
+    dims = (draw(st.sampled_from([6, 13, 26, 28])),
+            draw(st.sampled_from([6, 13, 26, 28])),
+            draw(st.sampled_from([3, 16, 32, 64])),
+            draw(st.sampled_from([4, 8, 32, 128])),
+            draw(st.sampled_from([1, 3])),
+            draw(st.sampled_from([1, 3])))
+    stride = 1 if op == "conv2d_dgrad" else draw(st.sampled_from([1, 2]))
+    return OpSpec(op, dims, stride=stride)
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_backward_schedules_divide_and_fit_vmem(data):
+    """INVARIANT: every scored schedule emitted for a backward op divides
+    the problem dims (no silent oracle fallback) and fits the kernel's
+    own vmem_bytes_required within the budget."""
+    from repro.tune import candidates
+    from repro.tune.lowering import divides, fits_vmem, vmem_budget
+    spec = data.draw(backward_spec())
+    budget = vmem_budget()
+    cands = candidates(spec)
+    assert cands, spec
+    for s in cands:
+        if s.predicted_dram_accesses is None:
+            continue  # explicit fallback candidate: ops takes the oracle
+        assert divides(spec, s.tiles), (spec, s.tiles)
+        assert fits_vmem(spec, s.tiles, budget), (spec, s.tiles)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_backward_cache_round_trip(data):
+    """INVARIANT: the cache round-trips every backward op key losslessly
+    (spec, tiles, provenance metadata)."""
+    import tempfile, os
+    from repro.tune import Schedule, ScheduleCache
+    spec = data.draw(backward_spec())
+    rank = 3 if spec.op == "matmul_dgrad" else 4
+    tiles = tuple(data.draw(st.sampled_from([1, 2, 8, 64]))
+                  for _ in range(rank))
+    sched = Schedule(spec, tiles, source="measured",
+                     predicted_dram_accesses=data.draw(
+                         st.integers(1, 10**9)),
+                     measured_us=4.25)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "schedules.json")
+        key = ScheduleCache(path).store(sched, device="cpu")
+        assert key.startswith(spec.op + "/")
+        got = ScheduleCache(path).lookup(spec, device="cpu")
+    assert got is not None
+    assert got.spec == spec
+    assert got.tiles == tiles
+    assert got.predicted_dram_accesses == sched.predicted_dram_accesses
+    assert got.measured_us == sched.measured_us
+
+
 @settings(max_examples=20, deadline=None)
 @given(data=st.data())
 def test_gemm_degenerate_case(data):
