@@ -1,0 +1,155 @@
+"""Serving benchmark: paged continuous batching vs the static-batch
+baseline on a mixed-length workload.
+
+Workload: ``--requests`` prompts with lengths in [prompt_len/2,
+prompt_len] and *heavy-tailed* generation budgets (75% short answers,
+25% long ones up to ``--gen``) — the output-length skew real serving
+traffic has.  The static engine processes requests in submission-order
+batches, left-padding prompts to the batch max and decoding every batch
+member to the batch's largest budget (tokens past a request's own budget
+are discarded — the lock-step waste continuous batching removes).  The
+paged engine streams the same requests through its decode slots,
+admitting by free-page budget and evicting the moment a request
+finishes.
+
+The default model is a serving-scale reduced config (d_model 256); the
+tiny smoke config's per-step compute is smaller than a host dispatch, so
+``--smoke`` exercises the machinery without making a throughput claim.
+
+Reports decode tokens/sec (useful tokens only) and p50/p95 per-token
+step latency.  CSV contract: ``name,us_per_call,derived``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serve.engine import (DecodeEngine, PagedEngine, PagedServeConfig,
+                                ServeConfig)
+
+
+def make_workload(cfg, n_requests: int, prompt_len: int, gen: int,
+                  seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(max(1, prompt_len // 2), prompt_len + 1,
+                        n_requests)
+    # heavy-tailed budgets: mostly short answers, occasional stragglers
+    short = rng.integers(2, max(3, gen // 8), n_requests)
+    long = rng.integers(max(2, gen // 2), gen + 1, n_requests)
+    gens = np.where(rng.random(n_requests) < 0.75, short, long)
+    prompts = [rng.integers(0, cfg.vocab, (int(L),), dtype=np.int32)
+               for L in lens]
+    return prompts, [int(g) for g in gens]
+
+
+def run_static(engine, prompts, gens, max_batch: int):
+    """Submission-order batches, padded prompts, lock-step decode."""
+    useful = 0
+    step_times = []
+    t0 = time.perf_counter()
+    for i in range(0, len(prompts), max_batch):
+        chunk_p = prompts[i:i + max_batch]
+        chunk_g = gens[i:i + max_batch]
+        width = max(p.shape[0] for p in chunk_p)
+        batch = np.zeros((len(chunk_p), width), np.int32)
+        for j, p in enumerate(chunk_p):        # right-aligned (left pad)
+            batch[j, width - p.shape[0]:] = p
+        n_tok = max(chunk_g)
+        tb = time.perf_counter()
+        engine.generate(batch, n_tok)
+        dt = time.perf_counter() - tb
+        step_times += [dt / n_tok] * n_tok     # lock-step: uniform
+        useful += sum(chunk_g)
+    wall = time.perf_counter() - t0
+    return wall, useful, step_times
+
+
+def run_paged(engine, prompts, gens):
+    for p, g in zip(prompts, gens):
+        engine.submit(p, g)
+    useful = 0
+    step_times = []
+    t0 = time.perf_counter()
+    while engine.has_work:
+        tb = time.perf_counter()
+        for req in engine.step():
+            useful += req.generated
+        dt = time.perf_counter() - tb
+        # one scheduler visit emits up to decode_chunk tokens per slot;
+        # normalize to per-token latency
+        step_times += [dt / max(engine.last_step_tokens, 1)] * \
+            max(engine.last_step_tokens, 1)
+    wall = time.perf_counter() - t0
+    return wall, useful, step_times
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=96)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + workload for CI")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.gen, args.prompt_len = 6, 8, 12
+        args.max_seq, args.max_batch = 32, 2
+
+    cfg = dataclasses.replace(get_reduced(args.arch), dtype=jnp.float32)
+    if not args.smoke:
+        # serving-scale reduced model: per-step compute must dominate
+        # host dispatch for the throughput comparison to mean anything
+        cfg = dataclasses.replace(cfg, d_model=256, n_layers=4,
+                                  n_heads=8, n_kv_heads=4, d_ff=1024,
+                                  vocab=4096)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    prompts, gens = make_workload(cfg, args.requests, args.prompt_len,
+                                  args.gen)
+
+    static = DecodeEngine(cfg, params, ServeConfig(max_seq=args.max_seq))
+    paged = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=args.max_seq, max_batch=args.max_batch,
+        page_size=args.page_size or None))
+
+    # warm the compile caches outside the timed region: one full pass of
+    # the same workload per engine (compiles are keyed by batch width,
+    # token budget and prefill bucket — the workload exercises them all)
+    run_static(static, prompts, gens, args.max_batch)
+    run_paged(paged, prompts, gens)
+
+    s_wall, s_useful, s_steps = run_static(static, prompts, gens,
+                                           args.max_batch)
+    p_wall, p_useful, p_steps = run_paged(paged, prompts, gens)
+    page = paged.page_size
+    assert p_useful == sum(gens), (p_useful, sum(gens))
+
+    s_tps = s_useful / s_wall
+    p_tps = p_useful / p_wall
+    s50, s95 = np.percentile(np.asarray(s_steps) * 1e6, [50, 95])
+    p50, p95 = np.percentile(np.asarray(p_steps) * 1e6, [50, 95])
+    emit("serve_static", s_wall / max(s_useful, 1) * 1e6,
+         f"{s_tps:.1f} tok/s p50={s50:.0f}us p95={s95:.0f}us "
+         f"useful={s_useful}")
+    emit("serve_paged", p_wall / max(p_useful, 1) * 1e6,
+         f"{p_tps:.1f} tok/s p50={p50:.0f}us p95={p95:.0f}us "
+         f"useful={p_useful} page={page} "
+         f"speedup={p_tps / max(s_tps, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -250,6 +250,54 @@ def backward_tile_candidates(op: str, dims: tuple[int, ...],
 
 
 @functools.lru_cache(maxsize=256)
+def flash_decode_tile_candidates(groups: int, seq_kv: int, head_dim: int,
+                                 bytes_per_elem: int = 2,
+                                 vmem_budget_bytes: int | None = None,
+                                 target: TpuTarget = TPU_V5E, top: int = 8,
+                                 ) -> tuple[tuple[int], ...]:
+    """Ranked ``(block_kv,)`` candidates for the paged flash-decode kernel.
+
+    Decode attention per (batch, kv-head) is the skinny GEMM
+    ``out[G, D] = softmax(q[G, D] @ K^T[D, S]) @ V[S, D]`` — a
+    memory-bound nest whose only free blocking choice is how much of the
+    S-long KV stream is resident per step.  The optimizer search runs on
+    that nest (C = the KV reduction dim); each winner's C extent is
+    snapped to lane alignment, to a divisor of ``seq_kv`` (the kernel
+    grid requires whole blocks), and to the kernel's VMEM model.  The
+    chosen block doubles as the paged cache's page size.
+    """
+    from repro.kernels.flash_decode import vmem_bytes_required
+    budget = default_vmem_budget(target, vmem_budget_bytes)
+    problem = Problem.gemm(M=groups, N_cols=head_dim, K_reduce=seq_kv,
+                           bytes_per_elem=bytes_per_elem)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    align = {Dim.C: target.lane}
+    raw: list[int] = []
+    try:
+        for e in ranked_level0_tiles(problem, levels, align=align, top=top):
+            raw.append(e.C)
+    except Exception as exc:
+        warnings.warn(f"blocking search failed for flash_decode "
+                      f"{(groups, seq_kv, head_dim)} ({exc!r}); using "
+                      "heuristic seed block")
+    raw.append(min(seq_kv, 512))                 # heuristic fallback seed
+    out: list[tuple[int]] = []
+    for bkv in raw:
+        mult = target.lane if seq_kv >= target.lane else 1
+        bkv = _pick_tile(seq_kv, max(bkv, mult), mult)
+        while (vmem_bytes_required(bkv, groups, head_dim,
+                                   bytes_per_elem) > budget
+               and bkv > mult):
+            bkv = max(mult, bkv // 2)
+        # the kernel iterates whole pages: snap to a divisor of seq_kv
+        if seq_kv % bkv:
+            bkv = max(d for d in divisors(seq_kv) if d <= bkv)
+        if (bkv,) not in out:
+            out.append((bkv,))
+    return tuple(out[:top])
+
+
+@functools.lru_cache(maxsize=256)
 def flash_tiles(seq_q: int, seq_kv: int, head_dim: int,
                 bytes_per_elem: int = 2,
                 vmem_budget_bytes: int | None = None,

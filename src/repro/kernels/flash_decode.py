@@ -1,0 +1,176 @@
+"""Paged flash-decode attention Pallas kernel (the serving nest).
+
+One query row per request streams over a block-table-indexed paged KV
+cache: the KV *pages* are the paper's kernel buffer (each page is fetched
+from HBM exactly once per step), and the fp32 running (m, l, acc)
+statistics are the output buffer held VMEM-resident across the whole KV
+reduction.  The page size — which is simultaneously the kernel's KV block
+— is tuned through ``repro.tune`` under the ``"flash_decode"`` op key, so
+the paged cache layout (``serve/kv_cache.py``) and the kernel schedule
+come from the same analytical blocking model.
+
+Layouts (GQA-native: all G query heads of one KV head share its pages):
+
+* ``q``:            (B, Hkv, G, D) — the current token's query rows;
+* ``k/v_pages``:    (n_pages, page, Hkv, D) — the global page pool;
+* ``block_tables``: (B, n_blocks) int32 — physical page of each logical
+  KV block; entries past a request's length must still be *valid* page
+  indices (use 0) because the DMA runs before the mask is applied;
+* ``lengths``:      (B,) int32 — tokens in the cache *including* the one
+  being decoded (its K/V must already be scattered into the pages).
+
+Grid is (B, Hkv, n_blocks) with the KV-block dim minor-most so the
+accumulators persist across the reduction; block tables and lengths ride
+in scalar-prefetch SMEM so the page DMA for block ``i`` of request ``b``
+is issued straight from ``block_tables[b, i]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import NEG_INF
+
+
+def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
+                        bytes_per_elem: int = 2) -> int:
+    """VMEM footprint of one grid step of :func:`flash_decode`.
+
+    The K and V pages are streamed (Pallas double-buffers them across
+    grid steps, hence the factor 2); the query tile, the output tile and
+    the fp32 (m, l, acc) running statistics stay resident; the score
+    block is fp32 intermediate.  Single source of truth for the
+    ``"flash_decode"`` schedule-candidate filter in ``tune.lowering``.
+    """
+    streamed = 2 * 2 * block_kv * head_dim * bytes_per_elem     # K + V pages
+    q_tile = groups * head_dim * bytes_per_elem
+    o_tile = groups * head_dim * bytes_per_elem
+    scores = groups * block_kv * 4
+    acc = groups * head_dim * 4 + 2 * groups * 4                # acc, m, l
+    return streamed + q_tile + o_tile + scores + acc
+
+
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float,
+                   window: int | None, logit_cap: float | None,
+                   block_kv: int, n_blocks: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    length = len_ref[b]                                  # tokens incl. current
+    kpos = i * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)                     # logical positions
+    mask = kpos < length
+    if window is not None:
+        # same rule as the dense decode path: query position is length-1,
+        # and it sees kpos > qpos - window
+        mask &= kpos > (length - 1) - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (G, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked blocks/rows (m == NEG_INF) against NaN
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                      jnp.exp(jnp.minimum(m_prev - m_new, 0.0)))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _done():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l)[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "logit_cap",
+                                             "interpret"))
+def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                 block_tables: jax.Array, lengths: jax.Array, *,
+                 window: int | None = None,
+                 logit_cap: float | None = None,
+                 interpret: bool = False) -> jax.Array:
+    """Paged single-token attention.  Returns (B, Hkv, G, D)."""
+    b, hkv, g, d = q.shape
+    _, page, _, _ = k_pages.shape
+    n_blocks = block_tables.shape[1]
+    scale = d ** -0.5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((g, d), jnp.float32),     # accumulator (OB)
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          logit_cap=logit_cap, block_kv=page,
+                          n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        lengths: jax.Array, *,
+                        window: int | None = None,
+                        logit_cap: float | None = None) -> jax.Array:
+    """jnp oracle: gather pages by block table, dense masked softmax.
+
+    Bit-comparable semantics to :func:`flash_decode` (same masking rules,
+    fp32 math); the correctness oracle in tests and the fast vectorized
+    path off-TPU.
+    """
+    b, hkv, g, d = q.shape
+    _, page, _, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(b, nb * page, hkv, d)
+    v = v_pages[block_tables].reshape(b, nb * page, hkv, d)
+    s = jnp.einsum("bhgd,blhd->bhgl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    kpos = jnp.arange(nb * page)
+    valid = kpos[None, :] < lengths[:, None]
+    if window is not None:
+        valid &= kpos[None, :] > (lengths[:, None] - 1) - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -246,3 +246,46 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
              v.transpose(0, 2, 1, 3))       # -> (B, Hkv, Sq, G, D)
     out = out.transpose(0, 2, 1, 3, 4).reshape(b, sq, hq, d)
     return out
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array, *,
+                    window: int | None = None,
+                    logit_cap: float | None = None,
+                    use_kernel: bool | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Single-token attention over a paged KV cache (decode path).
+
+    q: (B, Hq, D) — the current token's query rows; k/v_pages:
+    (n_pages, page, Hkv, D); block_tables: (B, n_blocks) physical page
+    per logical KV block; lengths: (B,) cache length per request
+    *including* the token being decoded.  Returns (B, Hq, D).
+
+    The page size doubles as the flash-decode kernel's KV block; it is
+    chosen by ``repro.tune`` under the ``"flash_decode"`` op key when the
+    paged cache is built (``serve.kv_cache.choose_page_size``).  With
+    ``use_kernel=None`` the Pallas kernel runs on TPU and the vectorized
+    jnp oracle runs elsewhere (the interpret-mode kernel is a correctness
+    harness, not a CPU fast path); pass ``use_kernel=True`` to force the
+    kernel (tests run it with ``interpret=True``).
+    """
+    from repro.kernels.flash_decode import flash_decode, paged_attention_ref
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if os.environ.get("REPRO_REF_ATTENTION"):
+        use_kernel = False
+    if use_kernel:
+        interpret = default_interpret() if interpret is None else interpret
+        out = flash_decode(qg, k_pages, v_pages, block_tables, lengths,
+                           window=window, logit_cap=logit_cap,
+                           interpret=interpret)
+    else:
+        out = paged_attention_ref(qg, k_pages, v_pages, block_tables,
+                                  lengths, window=window,
+                                  logit_cap=logit_cap)
+    return out.reshape(b, hq, d)

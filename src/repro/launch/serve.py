@@ -1,7 +1,12 @@
-"""Serving launcher: batched generation with the decode engine.
+"""Serving launcher: static-batch or paged continuous-batching engine.
 
+    # static batch (the baseline)
     python -m repro.launch.serve --arch gemma2-9b --reduced \
         --batch 4 --prompt-len 16 --gen 32
+
+    # paged continuous batching (tuned KV page size, mixed prompt lengths)
+    python -m repro.launch.serve --arch gemma2-9b --reduced --engine paged \
+        --batch 8 --requests 16 --prompt-len 16 --mixed-lens --gen 32
 """
 
 from __future__ import annotations
@@ -15,29 +20,61 @@ import numpy as np
 from repro.configs import get_config, get_reduced
 from repro.models import transformer as T
 from repro.models.sharding import set_axis_mapping
-from repro.launch.mesh import make_host_mesh
-from repro.serve.engine import DecodeEngine, ServeConfig
+from repro.serve.engine import (DecodeEngine, PagedEngine, PagedServeConfig,
+                                ServeConfig)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("static", "paged"),
+                    default="static")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static: batch size; paged: decode batch slots")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="paged: total requests to stream (default: batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--mixed-lens", action="store_true",
+                    help="paged: draw prompt lengths in [prompt_len/2, "
+                         "prompt_len]")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged: KV page size (0 -> tuned via the "
+                         "flash_decode schedule key)")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     set_axis_mapping({"data": None, "model": None})
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    if args.engine == "paged":
+        engine = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=args.max_seq, max_batch=args.batch,
+            page_size=args.page_size or None,
+            temperature=args.temperature))
+        n_req = args.requests or args.batch
+        lo = max(1, args.prompt_len // 2) if args.mixed_lens \
+            else args.prompt_len
+        lens = rng.integers(lo, args.prompt_len + 1, n_req)
+        prompts = [rng.integers(0, cfg.vocab, (int(L),), dtype=np.int32)
+                   for L in lens]
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, args.gen)
+        dt = time.perf_counter() - t0
+        tps = n_req * args.gen / dt
+        print(f"paged engine: page={engine.page_size} "
+              f"slots={args.batch} requests={n_req}")
+        print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+        print("sample:", out[0, :16].tolist())
+        return
+
     engine = DecodeEngine(cfg, params,
                           ServeConfig(max_seq=args.max_seq,
                                       temperature=args.temperature))
-
-    rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
                            dtype=np.int32)
     kwargs = {}

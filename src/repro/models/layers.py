@@ -97,8 +97,15 @@ def attention_defs(cfg: ModelConfig, model_ax: int) -> dict:
 def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
                     positions: jax.Array, *, causal: bool = True,
                     window: int | None = None,
-                    return_cache: bool = False):
-    """Full-sequence attention.  x: (B, S, D)."""
+                    return_cache: bool = False,
+                    full_cache: bool = False):
+    """Full-sequence attention.  x: (B, S, D).
+
+    ``full_cache=True`` forces the returned K/V cache into the full
+    position-indexed layout even for windowed (local) layers — the paged
+    serving path stores every layer's KV in pages and applies the window
+    as a mask at decode time, so it cannot use the ring-buffer layout.
+    """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = ops.linear(x, params["wq"]).reshape(b, s, hq, hd)
@@ -114,7 +121,7 @@ def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
     cache_len = return_cache if isinstance(return_cache, int) and \
         return_cache is not True else s
     cache_dtype = cfg.kv_cache_dtype or cfg.dtype
-    if window is not None:
+    if window is not None and not full_cache:
         # ring buffer: slot p % L holds position p; keep the last L
         length = min(window, cache_len)
         keep = min(length, s)
@@ -130,6 +137,23 @@ def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
     return out, {"k": ck, "v": cv}
 
 
+def qkv_decode_proj(cfg: ModelConfig, params: dict, x: jax.Array,
+                    positions: jax.Array):
+    """One-token Q/K/V projection + rope — the single definition shared
+    by the dense decode path (:func:`attention_decode`) and the paged
+    decode path (``serve.kv_cache.make_paged_attn_step``), so the two
+    can never drift apart.  x: (B, D); positions: (B, 1).
+    Returns q (B, Hq, D), k/v (B, Hkv, D)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q[:, 0], k[:, 0], v[:, 0]
+
+
 def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
                      cache: dict, pos: jax.Array, *,
                      window: int | None = None) -> tuple[jax.Array, dict]:
@@ -137,12 +161,9 @@ def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
     L = window (ring buffer) for local layers else max seq."""
     b, _, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
-    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
-    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
     posv = jnp.full((b, 1), pos, jnp.int32)
-    q = rope(q, posv, cfg.rope_theta)
-    k = rope(k, posv, cfg.rope_theta)
+    q, k, v = qkv_decode_proj(cfg, params, x[:, 0], posv)
+    q, k, v = q[:, None], k[:, None], v[:, None]
 
     length = cache["k"].shape[1]
     slot = pos % length if window is not None else pos

@@ -261,11 +261,20 @@ def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
 
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
             max_seq: int, prefix_embeds: jax.Array | None = None,
-            enc_embeds: jax.Array | None = None):
+            enc_embeds: jax.Array | None = None,
+            full_kv: bool = False,
+            logits_at: jax.Array | int | None = None):
     """Full-sequence forward that also writes the decode caches.
 
     Returns (last_logits (B, V), cache).  Caches are sized to ``max_seq``
     (global attention) / ``window`` (local) / O(1) (ssd, recurrent).
+
+    Serving plumbing: ``full_kv=True`` keeps windowed layers' K/V in the
+    full position-indexed layout (the paged cache scatters it into pages
+    and masks the window at decode time); ``logits_at`` returns the
+    logits of that sequence position instead of the last one — bucketed
+    prefill right-pads a prompt to its bucket, so the "last real token"
+    sits at ``true_len - 1``, not at ``bucket - 1``.
     """
     emb = params["embed"]["embedding"]
     h = jnp.take(emb, tokens, axis=0) * (cfg.d_model ** 0.5)
@@ -288,7 +297,7 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
         if mixer in ("global", "local"):
             out, cache = L.attention_apply(
                 cfg, p["mixer"], hn, positions, causal=True, window=window,
-                return_cache=max_seq)
+                return_cache=max_seq, full_cache=full_kv)
         elif mixer == "recurrent":
             out, cache = L.rglru_apply(cfg, p["mixer"], hn,
                                        return_cache=True)
@@ -332,7 +341,11 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
         h, c = block_prefill(p, h, pattern[j])
         tail_caches.append(c)
     h = L.rmsnorm(params["final_norm"], h)
-    logits = logits_fn(cfg, params, h[:, -1:, :])[:, 0, :]
+    if logits_at is None:
+        h_last = h[:, -1:, :]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, logits_at, 1, axis=1)
+    logits = logits_fn(cfg, params, h_last)[:, 0, :]
     return logits, {"layers": layer_caches if n_groups else [],
                     "tail": tail_caches}
 
@@ -397,14 +410,28 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def _block_decode(cfg: ModelConfig, p: dict, h: jax.Array, mixer: str,
-                  cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
+                  cache: dict, pos: jax.Array,
+                  attn_step=None) -> tuple[jax.Array, dict]:
+    """One block's decode step.
+
+    ``attn_step`` swaps the attention-layer implementation: it receives
+    ``(params, hn, cache, pos, window)`` and returns ``(out, new cache
+    entries)``.  The default is the dense per-request cache
+    (``L.attention_decode``); the serving subsystem passes the paged
+    flash-decode step (``serve.kv_cache.make_paged_attn_step``).  The
+    recurrent / SSD / FFN structure is shared by both paths.
+    """
     hn = L.rmsnorm(p["norm1"], h)
     new_cache = dict(cache)
     if mixer in ("global", "local"):
         window = cfg.window if mixer == "local" else None
-        attn_cache = {"k": cache["k"], "v": cache["v"]}
-        out, attn_new = L.attention_decode(cfg, p["mixer"], hn, attn_cache,
-                                           pos, window=window)
+        if attn_step is None:
+            attn_cache = {"k": cache["k"], "v": cache["v"]}
+            out, attn_new = L.attention_decode(cfg, p["mixer"], hn,
+                                               attn_cache, pos,
+                                               window=window)
+        else:
+            out, attn_new = attn_step(p["mixer"], hn, cache, pos, window)
         h = h + out
         new_cache.update(attn_new)
     elif mixer == "recurrent":
@@ -446,8 +473,15 @@ def _cross_decode(cfg, p, x, ck, cv):
 
 
 def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
-                cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
-    """One decode step.  token: (B,) int32; returns (logits (B, V), cache)."""
+                cache: dict, pos: jax.Array,
+                attn_step=None) -> tuple[jax.Array, dict]:
+    """One decode step.  token: (B,) int32; returns (logits (B, V), cache).
+
+    ``attn_step`` (see :func:`_block_decode`) substitutes the attention
+    cache implementation — the paged serving engine threads its
+    flash-decode step through here so every non-attention layer reuses
+    this exact code path.
+    """
     emb = params["embed"]["embedding"]
     h = jnp.take(emb, token[:, None], axis=0) * (cfg.d_model ** 0.5)
     pattern = cfg.layer_pattern
@@ -457,7 +491,7 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
         new_caches = []
         for j, mixer in enumerate(pattern):
             h, nc = _block_decode(cfg, cycle_params[j], h, mixer,
-                                  cycle_cache[j], pos)
+                                  cycle_cache[j], pos, attn_step)
             new_caches.append(nc)
         return h, new_caches
 
@@ -469,7 +503,8 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
         new_layer_caches = cache["layers"]
     new_tail = []
     for j, p in enumerate(params["tail"]):
-        h, nc = _block_decode(cfg, p, h, pattern[j], cache["tail"][j], pos)
+        h, nc = _block_decode(cfg, p, h, pattern[j], cache["tail"][j], pos,
+                              attn_step)
         new_tail.append(nc)
     h = L.rmsnorm(params["final_norm"], h)
     logits = logits_fn(cfg, params, h)[:, 0, :]

@@ -1,11 +1,17 @@
-"""Batched serving engine: prefill + jitted decode loop with KV caches.
+"""Serving engines: static-batch baseline and paged continuous batching.
 
-``DecodeEngine`` serves a batch of requests of (possibly) different prompt
-lengths by left-padding to a common prefill length, then stepping the
-jitted ``decode_step`` with greedy or temperature sampling.  Cache layout
-(ring buffers for local attention, O(1) states for SSM/RG-LRU) comes from
-``transformer.cache_defs`` — the decode working set is exactly the paper's
-"buffer sized to the reuse window" idea applied to serving.
+``DecodeEngine`` is the static-batch baseline: left-padded prefill, dense
+per-slot KV caches, one jitted token loop.  Its decode loop is a
+``lax.scan`` with device-side sampling — tokens accumulate on device and
+transfer to the host once per call, not once per token.
+
+``PagedEngine`` is the production path (docs/serving.md): a paged KV
+cache whose page size comes from the analytical blocking model
+(``tune`` op key ``"flash_decode"``), bucketed true-length prefill, and
+a continuous-batching scheduler that joins new prefills into the running
+decode batch each step and evicts finished requests.  The decode step is
+fully jitted — paged flash-decode attention, device-side sampling, and
+an on-device output buffer read back only when a request finishes.
 """
 
 from __future__ import annotations
@@ -20,6 +26,22 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serve import kv_cache as KV
+from repro.serve.scheduler import Request, Scheduler
+
+
+def sample_tokens(cfg: ModelConfig, logits: jax.Array, temperature: float,
+                  key: jax.Array) -> jax.Array:
+    """Greedy (temperature <= 0) or categorical sampling; masks the
+    padded-vocab tail.  logits: (B, V_padded) -> (B,) int32."""
+    logits = logits[:, :cfg.vocab]
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+# ========================= static-batch baseline ===========================
 
 
 @dataclasses.dataclass
@@ -30,19 +52,21 @@ class ServeConfig:
 
 
 class DecodeEngine:
+    """Static batch: every request prefills together (left-padded to a
+    common length) and decodes in lock-step for a fixed token budget."""
+
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
         self.cfg, self.params, self.sc = cfg, params, sc
-        self._step = jax.jit(
-            functools.partial(T.decode_step, cfg))
         self._prefill = jax.jit(
             functools.partial(T.prefill, cfg),
             static_argnames=("max_seq",))
+        self._gen = jax.jit(self._gen_fn, static_argnames=("n_tokens",))
 
     def generate(self, prompts: np.ndarray, n_tokens: int,
                  enc_embeds=None, prefix_embeds=None) -> np.ndarray:
         """prompts: (B, S0) int32 (right-aligned).  Returns (B, n_tokens)."""
         cfg, sc = self.cfg, self.sc
-        b, s0 = prompts.shape
+        _, s0 = prompts.shape
         extras = {}
         if enc_embeds is not None:
             extras["enc_embeds"] = enc_embeds
@@ -52,23 +76,286 @@ class DecodeEngine:
                                       max_seq=sc.max_seq, **extras)
         pos = s0 + (cfg.prefix_tokens if prefix_embeds is not None else 0)
         rng = jax.random.PRNGKey(sc.seed)
-        out = np.zeros((b, n_tokens), np.int32)
-        tok = self._sample(logits, rng, 0)
-        out[:, 0] = np.asarray(tok)
-        for i in range(1, n_tokens):
-            logits, cache = self._step(self.params, tok, cache,
-                                       jnp.int32(pos))
-            pos += 1
-            tok = self._sample(logits, rng, i)
-            out[:, i] = np.asarray(tok)
-        return out
+        # the whole token loop runs on device (lax.scan, sampling
+        # included) and transfers once — no per-token host sync
+        out = self._gen(self.params, logits, cache, jnp.int32(pos), rng,
+                        n_tokens=n_tokens)
+        return np.asarray(out)
 
-    def _sample(self, logits: jax.Array, rng: jax.Array,
-                i: int) -> jax.Array:
-        # mask padded-vocab tail
-        logits = logits[:, :self.cfg.vocab]
-        if self.sc.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        key = jax.random.fold_in(rng, i)
-        return jax.random.categorical(
-            key, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+    def _gen_fn(self, params, logits, cache, pos, rng, *, n_tokens: int):
+        cfg, sc = self.cfg, self.sc
+        tok0 = sample_tokens(cfg, logits, sc.temperature,
+                             jax.random.fold_in(rng, 0))
+
+        def body(carry, i):
+            tok, cache, pos = carry
+            logits, cache = T.decode_step(cfg, params, tok, cache, pos)
+            t = sample_tokens(cfg, logits, sc.temperature,
+                              jax.random.fold_in(rng, i))
+            return (t, cache, pos + 1), t
+
+        (_, _, _), rest = jax.lax.scan(
+            body, (tok0, cache, pos), jnp.arange(1, n_tokens))
+        return jnp.concatenate([tok0[:, None], rest.T], axis=1)
+
+
+# ======================== paged continuous batching ========================
+
+
+@dataclasses.dataclass
+class PagedServeConfig:
+    max_seq: int = 1024            # per-request prompt + generation cap
+    max_batch: int = 8             # decode batch slots
+    page_size: int | None = None   # None -> tuned ("flash_decode" key)
+    n_pages: int | None = None     # None -> max_batch full sequences + 1
+    temperature: float = 0.0
+    seed: int = 0
+    buckets: tuple[int, ...] | None = None   # prefill padding lengths
+    decode_chunk: int = 8          # decode steps per scheduler visit
+    use_kernel: bool | None = None  # paged attention: None -> TPU only
+    interpret: bool | None = None
+
+
+def default_buckets(cfg: ModelConfig, max_seq: int) -> tuple[int, ...] | None:
+    """Prefill length buckets: powers of two for pure-attention stacks
+    (bounded recompilation; right-padding is safe because causal
+    attention ignores the tail, and although the pad positions' K/V are
+    scattered into the request's reserved pages, they stay masked by the
+    length until decode overwrites each slot in order).  Recurrent/SSD
+    mixers fold *every* position into their O(1) state, so right-padding
+    would corrupt it — those prefill at exact lengths (None), one
+    compile per distinct prompt length."""
+    if all(p in ("global", "local") for p in cfg.layer_pattern):
+        out, b = [], 8
+        while b < max_seq:
+            out.append(b)
+            b *= 2
+        out.append(max_seq)
+        return tuple(sorted(set(out)))
+    return None
+
+
+class PagedEngine:
+    """Request/response serving over the paged cache.
+
+    ``submit()`` enqueues a prompt; ``step()`` runs one scheduler
+    iteration (admit + prefill joins, one jitted *decode chunk*,
+    evictions) and returns the requests that finished; ``generate()`` is
+    the batch-convenience wrapper used by the examples and benchmarks.
+
+    A decode chunk is up to ``decode_chunk`` token steps fused into one
+    ``lax.scan`` — the scheduler's quantum.  Per-slot activity is masked
+    inside the scan (a slot that exhausts its budget mid-chunk keeps its
+    length frozen and its output buffer untouched), so chunking changes
+    scheduling granularity, never results.  Page reservations are made
+    in full at admission, which is what makes block tables stable across
+    a chunk.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, sc: PagedServeConfig):
+        if cfg.is_encdec or cfg.prefix_tokens:
+            raise NotImplementedError(
+                "paged serving covers decoder-only token models")
+        self.cfg, self.params, self.sc = cfg, params, sc
+        has_attn = any(p in ("global", "local") for p in cfg.layer_pattern)
+        self.page_size = sc.page_size or (
+            KV.choose_page_size(cfg, sc.max_seq) if has_attn
+            else min(sc.max_seq, 128))   # attention-free: pages unused
+        self.max_blocks = KV.num_blocks(sc.max_seq, self.page_size)
+        n_pages = sc.n_pages or sc.max_batch * self.max_blocks + 1
+        self.cache = KV.init_paged_cache(cfg, sc.max_batch, n_pages,
+                                         self.page_size)
+        self.scheduler = Scheduler(sc.max_batch, self.page_size,
+                                   KV.PageAllocator(n_pages), sc.max_seq)
+        self.buckets = (sc.buckets if sc.buckets is not None
+                        else default_buckets(cfg, sc.max_seq))
+
+        b = sc.max_batch
+        self._block_tables = np.zeros((b, self.max_blocks), np.int32)
+        self._lengths = np.zeros(b, np.int32)      # cached tokens per slot
+        self._cur_tok = jnp.zeros(b, jnp.int32)
+        self._out_buf = jnp.zeros((b, sc.max_seq), jnp.int32)
+        self._rng = jax.random.PRNGKey(sc.seed)
+        self._step_count = 0
+        self._next_rid = 0
+        self._joins: dict[int, Any] = {}           # bucket -> jitted join
+        self._decode = jax.jit(self._decode_fn,
+                               static_argnames=("chunk",))
+        self.last_step_tokens = 0                  # benchmark counter
+
+    # -- request API ----------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        """Enqueue one prompt; returns the request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.scheduler.submit(Request(rid, prompt, int(max_new_tokens)))
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def step(self) -> list[Request]:
+        """One continuous-batching iteration; returns finished requests
+        (with ``.output`` filled)."""
+        self.last_step_tokens = 0
+        for req in self.scheduler.admit():
+            self._join(req)
+            self.last_step_tokens += 1             # the prefill token
+        running = [r for r in self.scheduler.running.values()
+                   if not r.done]
+        if running:
+            self._decode_once(running)
+        finished = []
+        done_slots = [s for s, r in self.scheduler.running.items()
+                      if r.done]
+        if done_slots:
+            # copy-on-write (see _join): one fresh buffer per step
+            self._block_tables = self._block_tables.copy()
+            self._lengths = self._lengths.copy()
+        for slot in done_slots:
+            req = self.scheduler.running[slot]
+            # the single host transfer for this request's tokens
+            req.output = np.asarray(
+                self._out_buf[slot, :req.generated])
+            self._block_tables[slot] = KV.SCRATCH_PAGE
+            self._lengths[slot] = 0
+            finished.append(self.scheduler.evict(slot))
+        return finished
+
+    def generate(self, prompts, n_tokens: int) -> np.ndarray:
+        """Batch convenience: submit all, run to completion, return
+        (B, n_tokens) in submission order.  ``prompts`` may be a 2-D
+        array or a list of 1-D arrays (ragged lengths welcome)."""
+        rids = [self.submit(p, n_tokens) for p in prompts]
+        done: dict[int, np.ndarray] = {}
+        while self.has_work:
+            for req in self.step():
+                done[req.rid] = req.output
+        return np.stack([done[r] for r in rids])
+
+    # -- internals ------------------------------------------------------------
+
+    def _bucket(self, length: int) -> int:
+        if self.buckets is None:
+            return length
+        for b in self.buckets:
+            if b >= length:
+                return b
+        return length
+
+    def _next_key(self) -> jax.Array:
+        self._step_count += 1
+        return jax.random.fold_in(self._rng, self._step_count)
+
+    def _join(self, req: Request) -> None:
+        """Prefill an admitted request at its bucketed true length,
+        scatter its KV into the reserved pages, sample its first token —
+        all in one jitted call per bucket length."""
+        slot, L = req.slot, req.prompt_len
+        bucket = self._bucket(L)
+        row = np.full(self.max_blocks, KV.SCRATCH_PAGE, np.int32)
+        row[:len(req.pages)] = req.pages
+        # copy-on-write: asynchronously dispatched device computations may
+        # hold zero-copy views of the old host arrays (CPU jax aliases
+        # numpy buffers) — never mutate them in place
+        self._block_tables = self._block_tables.copy()
+        self._block_tables[slot] = row
+        self._lengths = self._lengths.copy()
+        self._lengths[slot] = L
+
+        prompt = np.zeros((1, bucket), np.int32)
+        prompt[0, :L] = req.prompt
+        nb = KV.num_blocks(bucket, self.page_size)
+        pages = np.full(nb, KV.SCRATCH_PAGE, np.int32)
+        pages[:min(nb, len(req.pages))] = req.pages[:nb]
+        self.cache, self._cur_tok, self._out_buf = self._get_join(bucket)(
+            self.params, self.cache, jnp.asarray(prompt),
+            jnp.int32(L), jnp.int32(slot), jnp.asarray(pages),
+            self._cur_tok, self._out_buf, self._next_key())
+        req.generated = 1
+
+    def _get_join(self, bucket: int):
+        if bucket not in self._joins:
+            cfg, sc = self.cfg, self.sc
+
+            def join(params, cache, prompt, true_len, slot, pages,
+                     cur_tok, out_buf, key):
+                logits, dense = T.prefill(cfg, params, prompt,
+                                          max_seq=bucket, full_kv=True,
+                                          logits_at=true_len - 1)
+                cache = KV.write_prefill(cfg, cache, dense, slot, pages,
+                                         self.page_size)
+                tok = sample_tokens(cfg, logits, sc.temperature, key)[0]
+                return (cache, cur_tok.at[slot].set(tok),
+                        out_buf.at[slot, 0].set(tok))
+
+            self._joins[bucket] = jax.jit(join)
+        return self._joins[bucket]
+
+    def _decode_fn(self, params, cache, cur_tok, block_tables, lengths,
+                   occupied, remaining, out_idx, out_buf, key, *,
+                   chunk: int):
+        """``chunk`` fused decode steps (one device dispatch).
+
+        ``remaining[b]`` is the slot's token budget at chunk start; step
+        ``i`` is active for slot b iff ``occupied[b] and i <
+        remaining[b]``.  Inactive slots freeze their length, token and
+        output row (their masked pool writes land in their own reserved
+        pages or the scratch page — never in another request's)."""
+        cfg = self.cfg
+        attn = KV.make_paged_attn_step(cfg, block_tables, self.page_size,
+                                       self.sc.use_kernel,
+                                       self.sc.interpret)
+        rows = jnp.arange(cur_tok.shape[0])
+
+        def body(carry, i):
+            cur_tok, cache, lengths, out_idx, out_buf = carry
+            active = occupied & (i < remaining)
+            logits, cache = T.decode_step(cfg, params, cur_tok, cache,
+                                          lengths, attn_step=attn)
+            tok = sample_tokens(cfg, logits, self.sc.temperature,
+                                jax.random.fold_in(key, i))
+            tok = jnp.where(active, tok, cur_tok)
+            keep = out_buf[rows, out_idx]
+            out_buf = out_buf.at[rows, out_idx].set(
+                jnp.where(active, tok, keep))
+            out_idx = jnp.where(active, out_idx + 1, out_idx)
+            lengths = jnp.where(active, lengths + 1, lengths)
+            return (tok, cache, lengths, out_idx, out_buf), None
+
+        (cur_tok, cache, _, _, out_buf), _ = jax.lax.scan(
+            body, (cur_tok, cache, lengths, out_idx, out_buf),
+            jnp.arange(chunk))
+        return cur_tok, cache, out_buf
+
+    def _decode_once(self, running: list[Request]) -> None:
+        occupied = np.zeros(self.sc.max_batch, bool)
+        remaining = np.zeros(self.sc.max_batch, np.int32)
+        out_idx = np.zeros(self.sc.max_batch, np.int32)
+        for r in running:
+            occupied[r.slot] = True
+            remaining[r.slot] = r.max_new_tokens - r.generated
+            out_idx[r.slot] = r.generated
+        # chunk is a static jit arg: snap the tail to the next power of
+        # two so the decode scan compiles O(log decode_chunk) times, not
+        # once per distinct remaining-budget value (masking keeps any
+        # over-length steps result-invariant)
+        chunk = 1 << (int(remaining.max()) - 1).bit_length()
+        chunk = int(min(self.sc.decode_chunk, chunk))
+        self._cur_tok, self.cache, self._out_buf = self._decode(
+            self.params, self.cache, self._cur_tok,
+            jnp.asarray(self._block_tables), jnp.asarray(self._lengths),
+            jnp.asarray(occupied), jnp.asarray(remaining),
+            jnp.asarray(out_idx), self._out_buf, self._next_key(),
+            chunk=chunk)
+        # copy-on-write (see _join): the chunk just dispatched may hold a
+        # zero-copy view of the old _lengths buffer; replace, don't mutate
+        self._lengths = self._lengths.copy()
+        for r in running:
+            steps = min(chunk, r.max_new_tokens - r.generated)
+            r.generated += steps
+            self._lengths[r.slot] += steps
+            self.last_step_tokens += steps

@@ -1,0 +1,271 @@
+"""Paged KV cache: fixed-size KV blocks + per-request block tables.
+
+The serving analogue of the paper's buffer-sizing rule: instead of one
+dense ``(B, max_seq, Hkv, D)`` ring buffer per request slot, every
+attention layer owns a global *page pool* ``(n_pages, page, Hkv, D)`` and
+each request holds a block table mapping its logical KV blocks to
+physical pages.  The page size is not a heuristic — it is the KV block
+of the flash-decode kernel, chosen by the analytical blocking optimizer
+through ``repro.tune`` under the ``"flash_decode"`` op key
+(:func:`choose_page_size`), so cache layout and kernel schedule are one
+decision.
+
+Layout properties:
+
+* allocation granularity is one page — admission control is a free-page
+  budget (``PageAllocator``), not a max-batch-times-max-seq reservation;
+* pages are position-agnostic, so the layout admits prefix sharing: two
+  block tables may point at the same physical page, and the allocator
+  refcounts owners (:meth:`PageAllocator.share`).  The engine does not
+  share pages yet — a future prefix-cache layer must only ever share
+  *full, frozen* blocks, because decode writes into the page holding
+  position ``lengths[b]``;
+* page 0 is a reserved scratch page: retired or inactive request slots
+  keep all-zero block tables, so their (masked, ignored) decode writes
+  land harmlessly in the scratch page instead of needing a branch.
+
+Non-attention mixers (SSD, RG-LRU) keep their O(1) dense states, indexed
+by batch slot — paging only ever applies to the linearly-growing KV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.base import ParamDef, build, stack_defs
+from repro.models.config import ModelConfig
+
+SCRATCH_PAGE = 0
+
+
+def choose_page_size(cfg: ModelConfig, max_seq: int,
+                     cache=None) -> int:
+    """KV page size from the analytical model (op key ``"flash_decode"``).
+
+    The spec's dims are (G, S, D): G query heads per KV head stream over
+    an S-long cache of head dim D.  A tuned entry in the schedule cache
+    (``python -m repro.tune flash_decode ...``) wins; otherwise the
+    analytic top candidate is used.
+    """
+    from repro.tune import best_schedule
+    g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    dtype_name = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype).name
+    sched = best_schedule("flash_decode", (g, max_seq, cfg.head_dim),
+                          dtype_name, cache=cache)
+    return max(1, min(sched.tiles[0], max_seq))
+
+
+def num_blocks(length: int, page_size: int) -> int:
+    return -(-length // page_size)
+
+
+# ------------------------------ device side --------------------------------
+
+
+def paged_attention_cache_defs(cfg: ModelConfig, n_pages: int,
+                               page_size: int, model_ax: int) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cache_dtype = cfg.kv_cache_dtype or cfg.dtype
+    skv = "model" if model_ax > 1 and hkv % model_ax == 0 else None
+    spec = P(None, None, skv, None)
+    return {"k_pages": ParamDef((n_pages, page_size, hkv, hd), spec,
+                                init="zeros", dtype=cache_dtype),
+            "v_pages": ParamDef((n_pages, page_size, hkv, hd), spec,
+                                init="zeros", dtype=cache_dtype)}
+
+
+def paged_cache_defs(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, model_ax: int = 1) -> dict:
+    """Decode-state tree with paged KV for every attention layer.
+
+    Mirrors ``transformer.cache_defs`` so the scan structure is
+    identical; only the attention entries change layout (pools are
+    shared across the batch — no leading batch dim).
+    """
+    if cfg.is_encdec or cfg.prefix_tokens:
+        raise NotImplementedError(
+            "paged serving covers decoder-only token models")
+    pattern = cfg.layer_pattern
+    n_groups = cfg.n_layers // len(pattern)
+    rem = cfg.n_layers % len(pattern)
+
+    def one(mixer: str) -> dict:
+        if mixer in ("global", "local"):
+            return paged_attention_cache_defs(cfg, n_pages, page_size,
+                                              model_ax)
+        if mixer == "recurrent":
+            return L.rglru_cache_defs(cfg, batch, model_ax)
+        if mixer == "ssd":
+            return L.ssd_cache_defs(cfg, batch, model_ax)
+        raise ValueError(mixer)
+
+    return {"layers": [stack_defs(one(m), n_groups) for m in pattern],
+            "tail": [one(pattern[j]) for j in range(rem)]}
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, model_ax: int = 1):
+    return build(paged_cache_defs(cfg, batch, n_pages, page_size, model_ax),
+                 "init", jax.random.PRNGKey(0))
+
+
+def write_prefill(cfg: ModelConfig, paged: dict, dense: dict,
+                  slot: jax.Array, pages: jax.Array,
+                  page_size: int) -> dict:
+    """Scatter one request's dense prefill cache into the paged tree.
+
+    ``dense`` is a batch-1 ``transformer.prefill(..., full_kv=True)``
+    cache; ``pages`` is the request's physical page per logical block
+    (length >= ceil(bucket / page_size); spill entries may point at the
+    scratch page).  Attention K/V land in the pools; O(1) states land at
+    batch ``slot``.  Traceable — the engine jits this together with the
+    prefill itself, once per bucket length.
+    """
+    pattern = cfg.layer_pattern
+
+    def attn_group(pc: dict, dc: dict, stacked: bool) -> dict:
+        k, v = dc["k"], dc["v"]         # (..., 1, bucket, hkv, hd)
+        bucket = k.shape[-3]
+        nb = num_blocks(bucket, page_size)
+        pad = nb * page_size - bucket
+
+        def scatter(pool, kv):          # (n_pages, p, hkv, hd), (bucket,...)
+            blocks = jnp.pad(kv, ((0, pad), (0, 0), (0, 0))).reshape(
+                nb, page_size, *kv.shape[1:]).astype(pool.dtype)
+            return pool.at[pages[:nb]].set(blocks)
+
+        if stacked:
+            return {"k_pages": jax.vmap(scatter)(pc["k_pages"], k[:, 0]),
+                    "v_pages": jax.vmap(scatter)(pc["v_pages"], v[:, 0])}
+        return {"k_pages": scatter(pc["k_pages"], k[0]),
+                "v_pages": scatter(pc["v_pages"], v[0])}
+
+    def state_group(pc: dict, dc: dict, stacked: bool) -> dict:
+        if stacked:   # (n_groups, B, ...) <- (n_groups, 1, ...)
+            return {kk: pc[kk].at[:, slot].set(
+                        dc[kk][:, 0].astype(pc[kk].dtype))
+                    for kk in pc}
+        return {kk: pc[kk].at[slot].set(dc[kk][0].astype(pc[kk].dtype))
+                for kk in pc}
+
+    def one(mixer: str, pc: dict, dc: dict, stacked: bool) -> dict:
+        if mixer in ("global", "local"):
+            return attn_group(pc, dc, stacked)
+        return state_group(pc, dc, stacked)
+
+    new = {"layers": [], "tail": []}
+    for m, pc, dc in zip(pattern, paged["layers"], dense["layers"]):
+        new["layers"].append(one(m, pc, dc, stacked=True))
+    for j, (pc, dc) in enumerate(zip(paged["tail"], dense["tail"])):
+        new["tail"].append(one(pattern[j], pc, dc, stacked=False))
+    return new
+
+
+def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
+                         page_size: int, use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """The ``attn_step`` the paged engine threads through
+    ``transformer.decode_step``.
+
+    ``pos`` arrives as the per-request cached-token count (B,): the new
+    token sits at position ``pos[b]``, its K/V are scattered into page
+    ``block_tables[b, pos // page]`` slot ``pos % page``, and attention
+    runs over ``pos + 1`` positions through ``ops.paged_attention``
+    (the flash-decode kernel / its oracle).
+    """
+    from repro.kernels import ops
+
+    def attn_step(p: dict, hn: jax.Array, cache: dict, pos: jax.Array,
+                  window: int | None):
+        b, _, _ = hn.shape
+        hq, hd = cfg.n_heads, cfg.head_dim
+        q, k, v = L.qkv_decode_proj(cfg, p, hn[:, 0], pos[:, None])
+
+        rows = jnp.arange(b)
+        page_idx = block_tables[rows, pos // page_size]
+        slot_idx = pos % page_size
+        kp = cache["k_pages"].at[page_idx, slot_idx].set(
+            k.astype(cache["k_pages"].dtype))
+        vp = cache["v_pages"].at[page_idx, slot_idx].set(
+            v.astype(cache["v_pages"].dtype))
+
+        out = ops.paged_attention(q, kp, vp, block_tables, pos + 1,
+                                  window=window,
+                                  logit_cap=cfg.attn_logit_cap,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+        out = out.reshape(b, 1, hq * hd).astype(hn.dtype)
+        return out @ p["wo"], {"k_pages": kp, "v_pages": vp}
+
+    return attn_step
+
+
+# ------------------------------- host side ---------------------------------
+
+
+class PageAllocator:
+    """Host-side refcounted free list over the page pool.
+
+    Page 0 (``SCRATCH_PAGE``) is reserved and never handed out.
+    :meth:`share` takes an extra reference for prefix sharing (an
+    allocator capability; the engine itself does not share pages yet —
+    see the module docstring for the rule a sharer must follow); a page
+    returns to the free list when its last owner releases it.  Every
+    transition is checked, so a leak or double-free fails loudly — the
+    scheduler's hypothesis suite leans on that.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least one scratch + one real page")
+        self.n_pages = n_pages
+        self._refs = np.zeros(n_pages, np.int32)
+        self._free = list(range(n_pages - 1, 0, -1))   # page 0 reserved
+
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - 1
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise MemoryError("page pool exhausted")
+        page = self._free.pop()
+        assert self._refs[page] == 0, page
+        self._refs[page] = 1
+        return page
+
+    def alloc_many(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: need {n}, have {len(self._free)}")
+        return [self.alloc() for _ in range(n)]
+
+    def share(self, page: int) -> int:
+        """Take an extra reference (shared prompt prefix)."""
+        if page == SCRATCH_PAGE or self._refs[page] <= 0:
+            raise ValueError(f"cannot share unowned page {page}")
+        self._refs[page] += 1
+        return page
+
+    def free(self, page: int) -> None:
+        if page == SCRATCH_PAGE:
+            return                       # scratch is never owned
+        if self._refs[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+
+    def free_many(self, pages) -> None:
+        for p in pages:
+            self.free(int(p))

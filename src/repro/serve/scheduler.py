@@ -1,0 +1,108 @@
+"""Continuous-batching scheduler: admission by free-page budget.
+
+Policy layer of the serving subsystem (layout lives in ``kv_cache``,
+model math in ``engine``).  Requests wait in FIFO order; one is admitted
+when (a) a batch slot is free and (b) the page pool can cover its whole
+lifetime — ``ceil((prompt_len + max_new_tokens) / page_size)`` pages are
+reserved up front, so a running request can never stall mid-decode
+waiting for a page (no admission deadlock, at the cost of tail-page
+slack).  Finished requests are evicted at the step boundary, their pages
+return to the pool, and the freed slot joins the next admission round —
+the "per-step join of new prefills into the running decode batch".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.serve.kv_cache import PageAllocator, num_blocks
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side bookkeeping)."""
+
+    rid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new_tokens: int
+    pages: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    generated: int = 0              # tokens sampled so far
+    output: np.ndarray | None = None   # set at eviction
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+
+class Scheduler:
+    """FIFO continuous batching over ``max_batch`` slots and a page pool."""
+
+    def __init__(self, max_batch: int, page_size: int,
+                 allocator: PageAllocator, max_seq: int):
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.allocator = allocator
+        self.max_seq = max_seq
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}          # slot -> Request
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+
+    # -- queue ----------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.total_len > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + "
+                f"{req.max_new_tokens} new > max_seq {self.max_seq}")
+        if self.pages_needed(req) > self.allocator.capacity:
+            # would wait forever: even an empty pool can't cover it
+            raise ValueError(
+                f"request {req.rid}: needs {self.pages_needed(req)} pages "
+                f"but the pool holds {self.allocator.capacity}")
+        self.waiting.append(req)
+
+    def pages_needed(self, req: Request) -> int:
+        return num_blocks(req.total_len, self.page_size)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- admission / eviction -------------------------------------------------
+
+    def admit(self) -> list[Request]:
+        """Admit FIFO head requests while a slot and the page budget
+        allow; each admitted request leaves with its slot and its whole
+        page reservation (block table order = logical block order)."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            if self.allocator.available() < self.pages_needed(req):
+                break                    # strict FIFO: no head-of-line skip
+            self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.pages = self.allocator.alloc_many(self.pages_needed(req))
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def evict(self, slot: int) -> Request:
+        """Release a finished (or cancelled) request's slot and pages."""
+        req = self.running.pop(slot)
+        self.allocator.free_many(req.pages)
+        req.pages = []
+        req.slot = -1
+        self._free_slots.append(slot)
+        return req

@@ -29,7 +29,9 @@ def main(argv: list[str] | None = None) -> None:
                     help="GEMM ops (matmul, matmul_dgrad): M N K; conv "
                          "ops (conv2d, conv2d_dgrad, conv2d_wgrad): "
                          "X Y C K Fw Fh (output-space X/Y; see "
-                         "docs/training.md for the backward conventions)")
+                         "docs/training.md for the backward conventions); "
+                         "flash_decode: G S D (GQA group size, max KV "
+                         "length, head dim; see docs/serving.md)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--stride", type=int, default=1)
     ap.add_argument("--top-n", type=int, default=3,

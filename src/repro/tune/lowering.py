@@ -19,6 +19,11 @@ families' access geometry (the model counts element touches of the same
 three operands; which one is written does not change the counts), so the
 candidate search and scoring are reused with relabelled dims — see
 ``core.tpu_adapter.backward_tile_candidates`` and docs/training.md.
+
+``flash_decode`` (the serving nest, docs/serving.md) is a skinny GEMM
+whose reduction dim is the KV length; its single tile ``(block_kv,)`` is
+both the kernel's KV block and the paged cache's page size — see
+``core.tpu_adapter.flash_decode_tile_candidates``.
 """
 
 from __future__ import annotations
@@ -29,8 +34,9 @@ from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
                                     backward_tile_candidates,
                                     conv_tile_candidates,
                                     default_vmem_budget,
+                                    flash_decode_tile_candidates,
                                     matmul_tile_candidates)
-from repro.tune.schedule import GEMM_OPS, OpSpec, Schedule
+from repro.tune.schedule import ATTN_OPS, GEMM_OPS, OpSpec, Schedule
 
 # the one budget rule, shared with the snap loops in core.tpu_adapter
 vmem_budget = default_vmem_budget
@@ -49,6 +55,11 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
         from repro.kernels.matmul_blocked import vmem_bytes_required
         bm, bk, bn = tiles
         return vmem_bytes_required(bm, bk, bn, spec.itemsize) <= budget
+    if spec.op in ATTN_OPS:
+        from repro.kernels.flash_decode import vmem_bytes_required
+        G, _, D = spec.dims
+        (bkv,) = tiles
+        return vmem_bytes_required(bkv, G, D, spec.itemsize) <= budget
     if spec.op == "conv2d_wgrad":
         from repro.kernels.conv2d_bwd import vmem_bytes_required
     else:
@@ -65,6 +76,10 @@ def divides(spec: OpSpec, tiles: tuple[int, ...]) -> bool:
         M, N, K = spec.dims
         bm, bk, bn = tiles
         return M % bm == 0 and K % bk == 0 and N % bn == 0
+    if spec.op in ATTN_OPS:
+        _, S, _ = spec.dims
+        (bkv,) = tiles
+        return S % bkv == 0
     X, Y, C, K, _, _ = spec.dims
     bx, by, bc, bk = tiles
     # bc/bk divisibility is a hard kernel assert; bx/by divisibility avoids
@@ -97,6 +112,14 @@ def schedule_to_string(spec: OpSpec,
         bm, bk, bn = tiles
         loops = [Loop(Dim.C, bk), Loop(Dim.X, bm), Loop(Dim.K, bn),
                  Loop(Dim.C, K), Loop(Dim.K, N), Loop(Dim.X, M)]
+    elif spec.op in ATTN_OPS:
+        # one query block (all G rows, all D cols) resident; the grid
+        # streams KV pages of block_kv — the running (m, l, acc) state is
+        # the OB held across the whole C (KV) reduction.
+        G, S, D = spec.dims
+        (bkv,) = tiles
+        loops = [Loop(Dim.C, bkv), Loop(Dim.X, G), Loop(Dim.K, D),
+                 Loop(Dim.C, S)]
     elif spec.op == "conv2d_wgrad":
         X, Y, C, K, Fw, Fh = spec.dims
         bx, by, bc, bk = tiles
@@ -156,6 +179,10 @@ def candidates(spec: OpSpec,
         M, N, K = spec.dims
         raw = matmul_tile_candidates(M, N, K, spec.itemsize, budget,
                                      target, top=top)
+    elif spec.op == "flash_decode":
+        G, S, D = spec.dims
+        raw = flash_decode_tile_candidates(G, S, D, spec.itemsize,
+                                           budget, target, top=top)
     elif spec.op == "conv2d":
         X, Y, C, K, Fw, Fh = spec.dims
         raw = conv_tile_candidates(X, Y, C, K, Fw, Fh, spec.itemsize,
@@ -174,11 +201,17 @@ def candidates(spec: OpSpec,
                            spec, t, budget, target))
               for t in usable]
     # fewest predicted DRAM accesses first; break ties toward bigger
-    # blocks (fewer grid steps -> less pipeline overhead)
+    # blocks (fewer grid steps -> less pipeline overhead) — EXCEPT for
+    # flash_decode, where the KV stream touches every element once at any
+    # block size (the model ties) and the tile doubles as the paged
+    # cache's allocation granule: smaller pages waste fewer slots per
+    # request and admit under a finer free-block budget.
     def tile_product(s: Schedule) -> int:
         prod = 1
         for t in s.tiles:
             prod *= t
         return prod
-    scored.sort(key=lambda s: (s.predicted_dram_accesses, -tile_product(s)))
+    sign = 1 if spec.op in ATTN_OPS else -1
+    scored.sort(key=lambda s: (s.predicted_dram_accesses,
+                               sign * tile_product(s)))
     return scored[:top]

@@ -34,6 +34,21 @@ def make_inputs(schedule: Schedule, seed: int = 0):
 
     spec = schedule.spec
     rng = np.random.default_rng(seed)
+    if spec.op == "flash_decode":
+        # one request, one kv head, paged cache laid out with THIS
+        # schedule's block as the page size; a shuffled block table so
+        # the gather is genuinely indirect
+        G, S, D = spec.dims
+        (page,) = schedule.tiles
+        n_blocks = -(-S // page)
+        q = jnp.asarray(rng.normal(size=(1, 1, G, D)), spec.dtype)
+        kp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
+                         spec.dtype)
+        vp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
+                         spec.dtype)
+        bt = jnp.asarray(rng.permutation(n_blocks)[None, :], jnp.int32)
+        lengths = jnp.asarray([S], jnp.int32)
+        return q, kp, vp, bt, lengths
     if spec.op == "matmul_dgrad":
         M, N, K = spec.dims
         g = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
@@ -62,7 +77,11 @@ def run_once(schedule: Schedule, inputs, interpret: bool | None = None):
     spec = schedule.spec
     interpret = ops.default_interpret() if interpret is None \
         else bool(interpret)
-    if spec.op == "matmul_dgrad":
+    if spec.op == "flash_decode":
+        from repro.kernels.flash_decode import flash_decode
+        q, kp, vp, bt, lengths = inputs
+        out = flash_decode(q, kp, vp, bt, lengths, interpret=interpret)
+    elif spec.op == "matmul_dgrad":
         from repro.kernels.matmul_bwd import matmul_dgrad_a
         g, b = inputs
         bm, br, bo = schedule.tiles

@@ -19,6 +19,15 @@ analysis does not care which operand of the loop nest is written:
 * ``conv2d_wgrad``: the forward conv's dims verbatim; the (bx, by)
   tiles block the spatial *reduction*, (bc, bk) the channel dims.
 
+Serving adds one more memory-bound nest:
+
+* ``flash_decode``: ``dims = (G, S, D)`` — per (batch, kv-head) decode
+  attention where G query heads (the GQA group) stream over an S-long
+  paged KV cache of head dim D.  The single tile is ``(block_kv,)``:
+  the KV block of the flash-decode kernel AND the page size of the
+  paged cache (``serve/kv_cache.py``), so the analytical model fixes
+  both at once.
+
 A :class:`Schedule` is a concrete kernel configuration for that spec: the
 Pallas tile tuple (``(bm, bk, bn)`` or ``(bx, by, bc, bk)``), where it came
 from (``analytic`` / ``measured`` / ``cache`` / ``override``), the model's
@@ -36,8 +45,13 @@ from repro.core.loopnest import Problem
 
 GEMM_OPS = ("matmul", "matmul_dgrad")
 CONV_OPS = ("conv2d", "conv2d_dgrad", "conv2d_wgrad")
-OPS = GEMM_OPS + CONV_OPS
-TILE_RANK = {op: (3 if op in GEMM_OPS else 4) for op in OPS}
+ATTN_OPS = ("flash_decode",)
+OPS = GEMM_OPS + CONV_OPS + ATTN_OPS
+TILE_RANK = {op: (3 if op in GEMM_OPS else 4) for op in GEMM_OPS + CONV_OPS}
+# flash_decode tunes ONE size: the KV block — which is also the paged
+# cache's page size (serve/kv_cache.py), so cache layout and kernel
+# schedule cannot disagree.
+TILE_RANK["flash_decode"] = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +66,7 @@ class OpSpec:
     def __post_init__(self):
         if self.op not in OPS:
             raise ValueError(f"unknown op {self.op!r}; expected one of {OPS}")
-        want = 3 if self.op in GEMM_OPS else 6
+        want = 3 if self.op in GEMM_OPS + ATTN_OPS else 6
         if len(self.dims) != want:
             raise ValueError(
                 f"{self.op} expects {want} dims, got {self.dims}")
@@ -77,6 +91,14 @@ class OpSpec:
             M, N, K = self.dims
             return Problem.gemm(M=M, N_cols=N, K_reduce=K,
                                 bytes_per_elem=self.itemsize)
+        if self.op in ATTN_OPS:
+            # decode attention per (batch, kv-head): the G query rows
+            # stream over the S-long KV cache producing D outputs — a
+            # skinny GEMM whose reduction dim (C in the paper's nest)
+            # is the KV length being blocked.
+            G, S, D = self.dims
+            return Problem.gemm(M=G, N_cols=D, K_reduce=S,
+                                bytes_per_elem=self.itemsize)
         X, Y, C, K, Fw, Fh = self.dims
         return Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh,
                        stride=self.stride, bytes_per_elem=self.itemsize)
@@ -86,6 +108,9 @@ class OpSpec:
         if self.op in GEMM_OPS:
             M, N, K = self.dims
             shape = f"m{M}n{N}k{K}"
+        elif self.op in ATTN_OPS:
+            G, S, D = self.dims
+            shape = f"g{G}s{S}d{D}"
         else:
             X, Y, C, K, Fw, Fh = self.dims
             shape = f"x{X}y{Y}c{C}k{K}f{Fw}x{Fh}s{self.stride}"

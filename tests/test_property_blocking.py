@@ -110,16 +110,22 @@ def test_energy_positive_and_finite(data):
     assert all(v >= 0 for v in rep.per_buffer_pj.values())
 
 
-# -------- backward-op schedules (ISSUE 2: the training nests) --------------
+# -------- backward-op + serving schedules (ISSUE 2/3 nests) ----------------
 
 
 @st.composite
 def backward_spec(draw):
-    """A random backward OpSpec the tune pipeline must produce valid
-    schedules for."""
+    """A random non-forward OpSpec (backward nests + the serving
+    flash_decode nest) the tune pipeline must produce valid schedules
+    for."""
     from repro.tune import OpSpec
     op = draw(st.sampled_from(["matmul_dgrad", "conv2d_dgrad",
-                               "conv2d_wgrad"]))
+                               "conv2d_wgrad", "flash_decode"]))
+    if op == "flash_decode":
+        dims = (draw(st.sampled_from([1, 2, 4, 8])),        # GQA groups
+                draw(st.sampled_from([64, 256, 1024, 4096])),  # KV length
+                draw(st.sampled_from([16, 64, 128, 256])))  # head dim
+        return OpSpec(op, dims)
     if op == "matmul_dgrad":
         dims = (draw(st.sampled_from([8, 64, 96, 256])),
                 draw(st.sampled_from([32, 128, 384])),
@@ -161,10 +167,10 @@ def test_backward_cache_round_trip(data):
     (spec, tiles, provenance metadata)."""
     import tempfile, os
     from repro.tune import Schedule, ScheduleCache
+    from repro.tune.schedule import TILE_RANK
     spec = data.draw(backward_spec())
-    rank = 3 if spec.op == "matmul_dgrad" else 4
     tiles = tuple(data.draw(st.sampled_from([1, 2, 8, 64]))
-                  for _ in range(rank))
+                  for _ in range(TILE_RANK[spec.op]))
     sched = Schedule(spec, tiles, source="measured",
                      predicted_dram_accesses=data.draw(
                          st.integers(1, 10**9)),
