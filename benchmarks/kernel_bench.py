@@ -2,8 +2,15 @@
 traffic for the tile choices (analytic; wall-clock on CPU is NOT the TPU
 story, so the derived column reports the model's DRAM-traffic ratio),
 plus autotuned-vs-hardcoded tile comparisons on the same access model —
-for the FORWARD kernels and (ISSUE 2) the custom-VJP BACKWARD nests, so
-the BENCH json carries a training-cost axis."""
+for the FORWARD kernels, (ISSUE 2) the custom-VJP BACKWARD nests, and
+(ISSUE 4) the QUANTIZED variants (matmul_w8 under its dtype-aware
+schedule key), so the BENCH json carries training- and quantization-cost
+axes.  ``--dtype`` picks the activation dtype the forward-GEMM
+comparisons (incl. matmul_w8) run at — float32 default, bfloat16
+mirrors the TPU deployment width; the conv/backward/attention sections
+stay float32."""
+
+import argparse
 
 import numpy as np
 import jax
@@ -52,27 +59,48 @@ def tuned_vs_default(spec: OpSpec, default_tiles) -> tuple[tuple, str]:
                          f"DRAM accesses ({sched.source})")
 
 
-def run() -> None:
+def run(dtype: str = "float32") -> None:
     rng = np.random.default_rng(0)
+    jdt = getattr(jnp, dtype)
+    # interpret-mode kernels accumulate fp32 either way; tolerances track
+    # the activation width the comparison runs at
+    rtol, atol = (2e-2, 2e-2) if dtype == "bfloat16" else (1e-3, 1e-3)
     # matmul: hardcoded-default tiles vs the autotuner's pick
-    a = jnp.asarray(rng.normal(size=(256, 512)), jnp.float32)
-    b = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(256, 512)), jdt)
+    b = jnp.asarray(rng.normal(size=(512, 256)), jdt)
+    ref_out = np.asarray(ref.matmul_ref(a, b), np.float32)
     out = ops.matmul(a, b, tiles=DEFAULT_MATMUL_TILES, interpret=True)
     us, _ = timed(lambda: np.asarray(
         ops.matmul(a, b, tiles=DEFAULT_MATMUL_TILES, interpret=True)))
     ratio = matmul_traffic_ratio(4096, 4096, 4096)
-    emit("kernel/matmul_256x512x256", us,
+    emit(f"kernel/matmul_256x512x256_{dtype}", us,
          f"model DRAM-traffic reduction (4k GEMM) {ratio:.1f}x")
-    np.testing.assert_allclose(out, ref.matmul_ref(a, b), rtol=1e-3,
-                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref_out,
+                               rtol=rtol, atol=atol)
 
-    mm_spec = OpSpec("matmul", (256, 256, 512), "float32")
+    mm_spec = OpSpec("matmul", (256, 256, 512), dtype)
     mm_tiles, derived = tuned_vs_default(mm_spec, DEFAULT_MATMUL_TILES)
     us, tuned_out = timed(lambda: np.asarray(
         ops.matmul(a, b, tiles=mm_tiles, interpret=True)))
-    np.testing.assert_allclose(tuned_out, ref.matmul_ref(a, b), rtol=1e-3,
-                               atol=1e-3)
-    emit("kernel/matmul_256x512x256_tuned", us, derived)
+    np.testing.assert_allclose(np.asarray(tuned_out, np.float32), ref_out,
+                               rtol=rtol, atol=atol)
+    emit(f"kernel/matmul_256x512x256_tuned_{dtype}", us, derived)
+
+    # QUANTIZED variant: same dims, int8 weight stream, own schedule key
+    # — the dtype-aware model ranks its tiles against 1-byte weights
+    from repro.kernels.matmul_q import matmul_w8_ref
+    from repro.quant import quantize
+    w8_spec = OpSpec("matmul_w8", (256, 256, 512), dtype)
+    w8_tiles, w8_derived = tuned_vs_default(w8_spec, DEFAULT_MATMUL_TILES)
+    qt = quantize(b.astype(jnp.float32), "int8")
+    scale = qt.scale.reshape(-1)
+    us, q_out = timed(lambda: np.asarray(
+        ops.matmul_w8(a, qt.q, scale, tiles=w8_tiles, interpret=True)))
+    np.testing.assert_allclose(
+        np.asarray(q_out, np.float32),
+        np.asarray(matmul_w8_ref(a, qt.q, scale), np.float32),
+        rtol=rtol, atol=atol)
+    emit(f"kernel/matmul_w8_256x512x256_tuned_{dtype}", us, w8_derived)
 
     # matmul BACKWARD: the two dgrad nests (dA: (M,K,N); dB: (K,N,M)),
     # tuned vs the hardcoded default on predicted DRAM accesses, plus the
@@ -84,7 +112,9 @@ def run() -> None:
     grad_fn = jax.grad(
         lambda a, b: jnp.sum(ops.matmul(a, b, interpret=True) ** 2),
         argnums=(0, 1))
-    us, _ = timed(lambda: jax.tree.map(np.asarray, grad_fn(a, b)))
+    # backward stays float32 whatever --dtype drives the forward section
+    af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+    us, _ = timed(lambda: jax.tree.map(np.asarray, grad_fn(af, bf)))
     emit("kernel/matmul_256x512x256_bwd", us,
          f"dA {da_derived}; dB {db_derived}")
 
@@ -127,5 +157,18 @@ def run() -> None:
     emit("kernel/flash_attn_128", us, "GQA causal OK")
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dtype", default="float32",
+                    choices=("float32", "bfloat16"),
+                    help="activation dtype for the forward-GEMM "
+                         "tuned-vs-default comparisons, incl. the "
+                         "quantized matmul_w8 variant (int8 weight "
+                         "stream either way); the conv/backward/"
+                         "attention sections stay float32")
+    args = ap.parse_args()
+    run(dtype=args.dtype)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -11,8 +11,8 @@ Public API:
 
 from repro.core.loopnest import (BlockingString, Dim, Extents, Loop,
                                  Problem, divisors)
-from repro.core.buffers import (Buffer, Operand, place_buffers,
-                                table2_refetch_rate)
+from repro.core.buffers import (Buffer, Operand, operand_bytes,
+                                place_buffers, table2_refetch_rate)
 from repro.core.access import TrafficReport, analyze
 from repro.core.energy import (access_energy_pj, broadcast_energy_pj,
                                sram_area_mm2, MAC_ENERGY_PJ,
@@ -34,7 +34,8 @@ from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
 
 __all__ = [
     "BlockingString", "Dim", "Extents", "Loop", "Problem", "divisors",
-    "Buffer", "Operand", "place_buffers", "table2_refetch_rate",
+    "Buffer", "Operand", "operand_bytes", "place_buffers",
+    "table2_refetch_rate",
     "TrafficReport", "analyze",
     "access_energy_pj", "broadcast_energy_pj", "sram_area_mm2",
     "MAC_ENERGY_PJ", "DRAM_PJ_PER_16B",

@@ -37,6 +37,17 @@ OPERAND_DIMS = {
     Operand.OUTPUT: OUTPUT_DIMS,
 }
 
+
+def operand_bytes(problem: Problem, op: "Operand") -> int:
+    """Element width of one operand — the single mixed-precision lookup
+    shared by buffer sizing (here) and traffic/energy weighting
+    (``core.hierarchy`` / ``core.access``)."""
+    if op is Operand.INPUT:
+        return problem.input_bpe
+    if op is Operand.WEIGHT:
+        return problem.weight_bpe
+    return problem.output_bpe
+
 # Which loop dimensions trigger a buffer for which operand when added above.
 REUSE_RULES: dict[Dim, tuple[Operand, ...]] = {
     Dim.K: (Operand.INPUT,),
@@ -64,7 +75,7 @@ class Buffer:
     extents: Extents  # extents covered below ``pos`` (the block it holds)
 
     def size_bytes(self, problem: Problem) -> int:
-        return self.size_elems * problem.bytes_per_elem
+        return self.size_elems * operand_bytes(problem, self.operand)
 
     @property
     def name(self) -> str:

@@ -19,7 +19,8 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.access import BufferTraffic, TrafficReport, analyze
-from repro.core.buffers import Buffer, Operand, place_buffers
+from repro.core.buffers import (Buffer, Operand, operand_bytes,
+                                place_buffers)
 from repro.core.energy import (DRAM_PJ_PER_16B, MAC_ENERGY_PJ,
                                access_energy_pj, sram_area_mm2,
                                DATAPATH_AREA_MM2)
@@ -88,7 +89,10 @@ class EnergyReport:
 
 
 def _words(elems: int, bytes_per_elem: int) -> float:
-    """accesses in 16-bit words (the Table-3 unit)."""
+    """accesses in 16-bit words (the Table-3 unit).
+
+    Mixed-precision nests pass each operand's own width here — a 1-byte
+    quantized operand moves half the words of the paper's 16-bit data."""
     return elems * bytes_per_elem / 2.0
 
 
@@ -102,7 +106,6 @@ def energy_custom(s: BlockingString,
     on-chip level's fills (used by the multicore model).
     """
     report = report or analyze(s)
-    bpe = s.problem.bytes_per_elem
     per_buffer: dict[str, float] = {}
     placements: dict[str, str] = {}
     per_level: dict[str, float] = {}
@@ -134,7 +137,8 @@ def energy_custom(s: BlockingString,
         else:
             e_self = DRAM_PJ_PER_16B
         # serving reads below + receiving fills/writebacks happens here
-        pj = _words(bt.total_accesses, bpe) * e_self
+        pj = _words(bt.total_accesses,
+                    operand_bytes(s.problem, b.operand)) * e_self
         # the parent of the outermost buffer of each operand is DRAM; its
         # reads/writes on our behalf are DRAM accesses.
         per_buffer[b.name] = pj
@@ -147,7 +151,7 @@ def energy_custom(s: BlockingString,
     # buffer cross the DRAM boundary (plus all accesses of spilled buffers,
     # already costed at DRAM energy above).
     for op, elems in report.dram_accesses_by_operand.items():
-        pj = _words(elems, bpe) * DRAM_PJ_PER_16B
+        pj = _words(elems, operand_bytes(s.problem, op)) * DRAM_PJ_PER_16B
         dram_pj += pj
     per_level["DRAM"] = per_level.get("DRAM", 0.0) + dram_pj
 
@@ -157,7 +161,9 @@ def energy_custom(s: BlockingString,
         for bt in report.per_buffer:
             outer[bt.buffer.operand] = bt  # last one per operand is outermost
         for bt in outer.values():
-            per_buffer[bt.buffer.name] += _words(bt.parent_traffic, bpe) * \
+            per_buffer[bt.buffer.name] += _words(
+                bt.parent_traffic,
+                operand_bytes(s.problem, bt.buffer.operand)) * \
                 broadcast_extra_pj
 
     mem_pj = sum(per_buffer.values()) + dram_pj
@@ -194,7 +200,6 @@ def energy_fixed(s: BlockingString, levels: Sequence[MemLevel],
                  report: TrafficReport | None = None) -> EnergyReport:
     """Energy of a blocking on a fixed (e.g. CPU cache) hierarchy."""
     report = report or analyze(s)
-    bpe = s.problem.bytes_per_elem
     placements = pack_fixed(report, levels)
     per_buffer: dict[str, float] = {}
     per_level: dict[str, float] = {}
@@ -202,13 +207,16 @@ def energy_fixed(s: BlockingString, levels: Sequence[MemLevel],
     sram_bytes = 0
     for bt in report.per_buffer:
         lv = placements[bt.buffer.name]
-        pj = _words(bt.total_accesses, bpe) * lv.energy_pj_per_16b
+        pj = _words(bt.total_accesses,
+                    operand_bytes(s.problem, bt.buffer.operand)) * \
+            lv.energy_pj_per_16b
         per_buffer[bt.buffer.name] = pj
         per_level[lv.name] = per_level.get(lv.name, 0.0) + pj
         if lv.capacity_bytes:
             sram_bytes += bt.buffer.size_bytes(s.problem)
     for op, elems in report.dram_accesses_by_operand.items():
-        dram_pj += _words(elems, bpe) * DRAM_PJ_PER_16B
+        dram_pj += _words(elems, operand_bytes(s.problem, op)) * \
+            DRAM_PJ_PER_16B
     per_level["DRAM"] = per_level.get("DRAM", 0.0) + dram_pj
     mem_pj = sum(per_buffer.values()) + dram_pj
     mac_pj = s.problem.macs * MAC_ENERGY_PJ
@@ -221,14 +229,22 @@ def energy_fixed(s: BlockingString, levels: Sequence[MemLevel],
 
 
 def cache_accesses(s: BlockingString, levels: Sequence[MemLevel],
-                   report: TrafficReport | None = None) -> dict[str, int]:
+                   report: TrafficReport | None = None,
+                   operand_weights: dict[Operand, int] | None = None,
+                   ) -> dict[str, int]:
     """Access counts per fixed level — reproduces the paper's Fig. 3/4
     L2/L3 access-count comparison.
 
     Counts are CUMULATIVE down the hierarchy, matching hardware counters
     on inclusive caches: a request served by an L3-resident buffer also
     accesses L2 (allocation on the miss path), so accesses(L) includes the
-    demand of every buffer living at L or further out."""
+    demand of every buffer living at L or further out.
+
+    ``operand_weights`` multiplies each operand's accesses (default 1 =
+    element counts).  Passing per-operand byte widths turns the same
+    placement walk into byte traffic — the single accounting shared with
+    ``tune.predicted_dram_bytes``, so the miss-path rules can never
+    diverge between the count and byte ranks."""
     from repro.core.buffers import buffers_by_operand
 
     report = report or analyze(s)
@@ -238,7 +254,8 @@ def cache_accesses(s: BlockingString, levels: Sequence[MemLevel],
     counts: dict[str, int] = {lv.name: 0 for lv in levels}
     traffic = {bt.buffer.name: bt for bt in report.per_buffer}
     by_op = buffers_by_operand([bt.buffer for bt in report.per_buffer])
-    for chain in by_op.values():
+    for op, chain in by_op.items():
+        w = 1 if operand_weights is None else operand_weights[op]
         homes = [level_idx[placements[b.name].name] for b in chain]
         for i, b in enumerate(chain):
             bt = traffic[b.name]
@@ -247,8 +264,8 @@ def cache_accesses(s: BlockingString, levels: Sequence[MemLevel],
             # demand served to the level below passes through this level
             # and every level between it and the datapath
             for lv in range(home, -1, -1):
-                counts[levels[lv].name] += bt.reads_served
+                counts[levels[lv].name] += bt.reads_served * w
             # fills/writebacks travel the miss path up to the parent home
             for lv in range(min(home + 1, dram_idx), max(parent, home) + 1):
-                counts[levels[lv].name] += bt.parent_traffic
+                counts[levels[lv].name] += bt.parent_traffic * w
     return counts

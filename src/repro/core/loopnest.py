@@ -46,7 +46,16 @@ REDUCTION_DIMS = frozenset({Dim.C, Dim.FW, Dim.FH})
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
-    """Dimensions of one convolutional (or FC) layer."""
+    """Dimensions of one convolutional (or FC) layer.
+
+    ``bytes_per_elem`` is the uniform element width (the paper uses 16-bit
+    data throughout); mixed-precision nests override it per operand with
+    ``input_bytes`` / ``weight_bytes`` / ``output_bytes`` (``None`` means
+    "same as bytes_per_elem").  Element width is a first-class blocking
+    parameter: the access/energy model counts traffic in bytes, so a
+    1-byte weight operand lets twice the weight tile fit in the same
+    buffer and shifts the optimum — exactly the lever quantization pulls.
+    """
 
     X: int
     Y: int
@@ -57,13 +66,32 @@ class Problem:
     N: int = 1
     stride: int = 1
     bytes_per_elem: int = 2  # the paper uses 16-bit data throughout
+    input_bytes: int | None = None    # activations (w8a8: 1)
+    weight_bytes: int | None = None   # weights / KV stream (w8: 1, fp8: 1)
+    output_bytes: int | None = None
 
     @classmethod
     def gemm(cls, M: int, N_cols: int, K_reduce: int, batch: int = 1,
-             bytes_per_elem: int = 2) -> "Problem":
+             bytes_per_elem: int = 2,
+             input_bytes: int | None = None,
+             weight_bytes: int | None = None,
+             output_bytes: int | None = None) -> "Problem":
         """A GEMM (FC layer / transformer projection) as a degenerate conv."""
         return cls(X=M, Y=1, C=K_reduce, K=N_cols, Fw=1, Fh=1, N=batch,
-                   bytes_per_elem=bytes_per_elem)
+                   bytes_per_elem=bytes_per_elem, input_bytes=input_bytes,
+                   weight_bytes=weight_bytes, output_bytes=output_bytes)
+
+    @property
+    def input_bpe(self) -> int:
+        return self.input_bytes or self.bytes_per_elem
+
+    @property
+    def weight_bpe(self) -> int:
+        return self.weight_bytes or self.bytes_per_elem
+
+    @property
+    def output_bpe(self) -> int:
+        return self.output_bytes or self.bytes_per_elem
 
     def full_extent(self, d: Dim) -> int:
         return {Dim.X: self.X, Dim.Y: self.Y, Dim.C: self.C, Dim.K: self.K,
@@ -95,8 +123,9 @@ class Problem:
         return self.N * self.X * self.Y * self.K
 
     def total_bytes(self) -> int:
-        return (self.input_elems + self.weight_elems + self.output_elems) \
-            * self.bytes_per_elem
+        return (self.input_elems * self.input_bpe +
+                self.weight_elems * self.weight_bpe +
+                self.output_elems * self.output_bpe)
 
 
 @dataclasses.dataclass(frozen=True)

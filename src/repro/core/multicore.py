@@ -20,7 +20,8 @@ import dataclasses
 from typing import Sequence
 
 from repro.core.access import analyze
-from repro.core.buffers import Operand, buffers_by_operand, place_buffers
+from repro.core.buffers import (Operand, buffers_by_operand, operand_bytes,
+                                place_buffers)
 from repro.core.energy import (DRAM_PJ_PER_16B, access_energy_pj,
                                broadcast_energy_pj)
 from repro.core.loopnest import BlockingString, Dim, Loop, Problem
@@ -125,7 +126,6 @@ def _evaluate_partitioned(per_core: BlockingString, scheme: str,
                           cores: int, layers: int) -> MulticoreReport:
     report = analyze(per_core)
     problem = per_core.problem
-    bpe = problem.bytes_per_elem
 
     by_op = buffers_by_operand([bt.buffer for bt in report.per_buffer])
     last_level = {op: chain[-1] for op, chain in by_op.items() if chain}
@@ -145,9 +145,12 @@ def _evaluate_partitioned(per_core: BlockingString, scheme: str,
     private_pj = 0.0
     ll_pj = {Operand.INPUT: 0.0, Operand.WEIGHT: 0.0, Operand.OUTPUT: 0.0}
     broadcast_pj = 0.0
-    dram_words = sum(report.dram_accesses_by_operand.values()) * bpe / 2.0
 
     for op, chain in by_op.items():
+        # mixed-precision nests: each operand's words counted at its own
+        # width, matching the per-operand buffer sizes fed to
+        # access_energy_pj below
+        bpe = operand_bytes(problem, op)
         for b in chain:
             bt = traffic[b.name]
             words = bt.total_accesses * bpe / 2.0
@@ -173,13 +176,14 @@ def _evaluate_partitioned(per_core: BlockingString, scheme: str,
     dram_pj = 0.0
     for op, elems in report.dram_accesses_by_operand.items():
         mult = 1 if op is _BROADCAST_OPERAND[scheme] else cores
-        dram_pj += (elems * bpe / 2.0) * DRAM_PJ_PER_16B * mult
+        dram_pj += (elems * operand_bytes(problem, op) / 2.0) * \
+            DRAM_PJ_PER_16B * mult
 
     # shuffle: restoring the output layout for the next layer (K scheme
     # scatters channels across cores -> all-to-all once per layer)
     shuffle_pj = 0.0
     if cores > 1 and layers > 0 and scheme == "K":
-        out_words = problem.output_elems * cores * bpe / 2.0
+        out_words = problem.output_elems * cores * problem.output_bpe / 2.0
         shuffle_pj = out_words * e_bcast * layers
 
     return MulticoreReport(
@@ -199,6 +203,6 @@ def best_scheme(s: BlockingString, cores: int) -> MulticoreReport:
 def sharding_advice(problem: Problem, s: BlockingString) -> str:
     """TPU translation of the scheme choice (DESIGN.md §3): K-partitioning
     == tensor-parallel (shard weights), XY == data/sequence parallel."""
-    kb = problem.weight_elems * problem.bytes_per_elem
-    ib = problem.input_elems * problem.bytes_per_elem
+    kb = problem.weight_elems * problem.weight_bpe
+    ib = problem.input_elems * problem.input_bpe
     return "tensor_parallel" if kb >= ib else "data_parallel"

@@ -77,22 +77,28 @@ def _pick_tile(extent: int, target: int, mult: int) -> int:
 
 
 def _matmul_fits(bm: int, bk: int, bn: int, bytes_per_elem: int,
-                 budget: int) -> bool:
+                 budget: int, weight_bytes: int | None = None) -> bool:
     # lazy import: the kernel module (jax) owns its VMEM layout; core
     # stays importable without jax until tiles are actually derived.
+    if weight_bytes is not None:
+        from repro.kernels.matmul_q import vmem_bytes_required
+        return vmem_bytes_required(bm, bk, bn, bytes_per_elem,
+                                   weight_bytes) <= budget
     from repro.kernels.matmul_blocked import vmem_bytes_required
     return vmem_bytes_required(bm, bk, bn, bytes_per_elem) <= budget
 
 
 def _snap_matmul(bm: int, bk: int, bn: int, M: int, N: int, K: int,
                  bytes_per_elem: int, budget: int,
-                 target: TpuTarget) -> tuple[int, int, int]:
+                 target: TpuTarget,
+                 weight_bytes: int | None = None) -> tuple[int, int, int]:
     """Snap an analytical (bm, bk, bn) to MXU alignment + VMEM fit."""
     # lanes on the minor (N, K) dims, sublanes on M
     bm = _pick_tile(M, max(bm, target.sublane), target.sublane)
     bn = _pick_tile(N, max(bn, target.lane), target.lane)
     bk = _pick_tile(K, max(bk, target.lane), target.lane)
-    while not _matmul_fits(bm, bk, bn, bytes_per_elem, budget):
+    while not _matmul_fits(bm, bk, bn, bytes_per_elem, budget,
+                           weight_bytes):
         # shrink the largest contributor
         if bk * (bm + bn) >= bm * bn and bk > target.lane:
             bk = max(target.lane, bk // 2)
@@ -109,7 +115,9 @@ def _snap_matmul(bm: int, bk: int, bn: int, M: int, N: int, K: int,
 def matmul_tile_candidates(M: int, N: int, K: int, bytes_per_elem: int = 2,
                            vmem_budget_bytes: int | None = None,
                            target: TpuTarget = TPU_V5E,
-                           top: int = 8) -> tuple[tuple[int, int, int], ...]:
+                           top: int = 8,
+                           weight_bytes: int | None = None,
+                           ) -> tuple[tuple[int, int, int], ...]:
     """Ranked (bm, bk, bn) candidates for C[M,N] += A[M,K] @ B[K,N].
 
     The optimizer sees a 2-level hierarchy (VMEM working set, HBM above)
@@ -117,10 +125,15 @@ def matmul_tile_candidates(M: int, N: int, K: int, bytes_per_elem: int = 2,
     winner is then snapped to hardware alignment and the VMEM budget.
     Order follows the optimizer's energy ranking; the autotuner
     (``repro.tune``) re-ranks by predicted DRAM traffic and measurement.
+
+    ``weight_bytes`` gives the B operand its own element width (int8
+    weights: 1) — the search then sizes the weight tile in those bytes
+    and the VMEM fit uses the quantized kernel's footprint model.
     """
     budget = default_vmem_budget(target, vmem_budget_bytes)
     problem = Problem.gemm(M=M, N_cols=N, K_reduce=K,
-                           bytes_per_elem=bytes_per_elem)
+                           bytes_per_elem=bytes_per_elem,
+                           weight_bytes=weight_bytes)
     levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
     align = {Dim.X: target.sublane, Dim.K: target.lane, Dim.C: target.lane}
     raw: list[tuple[int, int, int]] = []
@@ -134,7 +147,7 @@ def matmul_tile_candidates(M: int, N: int, K: int, bytes_per_elem: int = 2,
     out: list[tuple[int, int, int]] = []
     for bm, bk, bn in raw:
         cand = _snap_matmul(bm, bk, bn, M, N, K, bytes_per_elem, budget,
-                            target)
+                            target, weight_bytes)
         if cand not in out:
             out.append(cand)
     return tuple(out[:top])
@@ -254,6 +267,7 @@ def flash_decode_tile_candidates(groups: int, seq_kv: int, head_dim: int,
                                  bytes_per_elem: int = 2,
                                  vmem_budget_bytes: int | None = None,
                                  target: TpuTarget = TPU_V5E, top: int = 8,
+                                 kv_bytes: int | None = None,
                                  ) -> tuple[tuple[int], ...]:
     """Ranked ``(block_kv,)`` candidates for the paged flash-decode kernel.
 
@@ -265,11 +279,17 @@ def flash_decode_tile_candidates(groups: int, seq_kv: int, head_dim: int,
     snapped to lane alignment, to a divisor of ``seq_kv`` (the kernel
     grid requires whole blocks), and to the kernel's VMEM model.  The
     chosen block doubles as the paged cache's page size.
+
+    ``kv_bytes`` gives the streamed K/V pages their own element width
+    (fp8 cache: 1); the q rows and the fp32 running state keep
+    ``bytes_per_elem`` — an fp8 cache fits twice the page in the same
+    VMEM, so the fp8-aware search can pick larger pages.
     """
     from repro.kernels.flash_decode import vmem_bytes_required
     budget = default_vmem_budget(target, vmem_budget_bytes)
     problem = Problem.gemm(M=groups, N_cols=head_dim, K_reduce=seq_kv,
-                           bytes_per_elem=bytes_per_elem)
+                           bytes_per_elem=bytes_per_elem,
+                           weight_bytes=kv_bytes)
     levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
     align = {Dim.C: target.lane}
     raw: list[int] = []
@@ -285,8 +305,8 @@ def flash_decode_tile_candidates(groups: int, seq_kv: int, head_dim: int,
     for bkv in raw:
         mult = target.lane if seq_kv >= target.lane else 1
         bkv = _pick_tile(seq_kv, max(bkv, mult), mult)
-        while (vmem_bytes_required(bkv, groups, head_dim,
-                                   bytes_per_elem) > budget
+        while (vmem_bytes_required(bkv, groups, head_dim, bytes_per_elem,
+                                   kv_bytes=kv_bytes) > budget
                and bkv > mult):
             bkv = max(mult, bkv // 2)
         # the kernel iterates whole pages: snap to a divisor of seq_kv

@@ -38,7 +38,8 @@ from repro.kernels.flash_attention import NEG_INF
 
 
 def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
-                        bytes_per_elem: int = 2) -> int:
+                        bytes_per_elem: int = 2,
+                        kv_bytes: int | None = None) -> int:
     """VMEM footprint of one grid step of :func:`flash_decode`.
 
     The K and V pages are streamed (Pallas double-buffers them across
@@ -46,8 +47,13 @@ def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
     the fp32 (m, l, acc) running statistics stay resident; the score
     block is fp32 intermediate.  Single source of truth for the
     ``"flash_decode"`` schedule-candidate filter in ``tune.lowering``.
+
+    ``kv_bytes`` is the page element width when the cache is quantized
+    (fp8: 1) — only the streamed pages narrow; q/out keep their dtype
+    and the running statistics stay fp32.
     """
-    streamed = 2 * 2 * block_kv * head_dim * bytes_per_elem     # K + V pages
+    kvb = kv_bytes or bytes_per_elem
+    streamed = 2 * 2 * block_kv * head_dim * kvb                # K + V pages
     q_tile = groups * head_dim * bytes_per_elem
     o_tile = groups * head_dim * bytes_per_elem
     scores = groups * block_kv * 4
@@ -55,26 +61,8 @@ def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
     return streamed + q_tile + o_tile + scores + acc
 
 
-def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale: float,
-                   window: int | None, logit_cap: float | None,
-                   block_kv: int, n_blocks: int):
-    b = pl.program_id(0)
-    i = pl.program_id(2)
-
-    @pl.when(i == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    if logit_cap is not None:
-        s = logit_cap * jnp.tanh(s / logit_cap)
-
+def _block_mask(len_ref, b, i, block_kv: int, window: int | None):
+    """Validity mask for KV block ``i`` of request ``b``."""
     length = len_ref[b]                                  # tokens incl. current
     kpos = i * block_kv + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_kv), 1)                     # logical positions
@@ -83,8 +71,13 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         # same rule as the dense decode path: query position is length-1,
         # and it sees kpos > qpos - window
         mask &= kpos > (length - 1) - window
-    s = jnp.where(mask, s, NEG_INF)
+    return mask
 
+
+def _softmax_update(s, v, mask, m_ref, l_ref, acc_ref):
+    """One streaming-softmax step over a masked score block — the shared
+    core of the bf16 and fp8 decode kernels."""
+    s = jnp.where(mask, s, NEG_INF)
     m_prev = m_ref[...]                                  # (G, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
@@ -98,11 +91,69 @@ def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         p, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
+
+def _decode_init(i, m_ref, l_ref, acc_ref):
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref):
     @pl.when(i == n_blocks - 1)
     def _done():
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
         o_ref[...] = (acc_ref[...] / safe_l)[None, None].astype(o_ref.dtype)
+
+
+def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float,
+                   window: int | None, logit_cap: float | None,
+                   block_kv: int, n_blocks: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    _decode_init(i, m_ref, l_ref, acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    mask = _block_mask(len_ref, b, i, block_kv, window)
+    _softmax_update(s, v, mask, m_ref, l_ref, acc_ref)
+    _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref)
+
+
+def _decode_fp8_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                       vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       scale: float, window: int | None,
+                       logit_cap: float | None, block_kv: int,
+                       n_blocks: int):
+    """fp8-page variant: K/V stream in at 1 byte/elem and dequantize
+    in-VMEM with the per-kv-head fp32 scales.  The scales are scalars
+    within a grid step, so K's folds into the score block and V's into
+    the accumulator update — no widened page tile is ever materialized.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    _decode_init(i, m_ref, l_ref, acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D) fp8->f32
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    ks = ks_ref[0, 0]                                    # this head's scales
+    vs = vs_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (scale * ks)
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    mask = _block_mask(len_ref, b, i, block_kv, window)
+    _softmax_update(s, v * vs, mask, m_ref, l_ref, acc_ref)
+    _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "logit_cap",
@@ -144,6 +195,80 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "logit_cap",
+                                             "interpret"))
+def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     k_scale: jax.Array, v_scale: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, *,
+                     window: int | None = None,
+                     logit_cap: float | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Paged single-token attention over an fp8-quantized page pool.
+
+    Same contract as :func:`flash_decode` except ``k_pages``/``v_pages``
+    are fp8 (``float8_e4m3fn``) and ``k_scale``/``v_scale`` are fp32
+    per-kv-head dequantization scales of shape ``(Hkv,)`` (pass ones for
+    a pure-cast cache).  The pages stream from HBM at one byte per
+    element; dequantization happens in VMEM inside the kernel, so HBM
+    traffic for the dominant decode operand is halved vs bf16 — which is
+    why the page size comes from the ``"flash_decode_fp8"`` schedule key.
+    Returns (B, Hkv, G, D) in ``q.dtype``.
+    """
+    b, hkv, g, d = q.shape
+    _, page, _, _ = k_pages.shape
+    n_blocks = block_tables.shape[1]
+    scale = d ** -0.5
+    ks = jnp.asarray(k_scale, jnp.float32).reshape(hkv, 1)
+    vs = jnp.asarray(v_scale, jnp.float32).reshape(hkv, 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, i, bt, ln: (h, 0)),
+            pl.BlockSpec((1, 1), lambda bi, h, i, bt, ln: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((g, d), jnp.float32),     # accumulator (OB)
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_fp8_kernel, scale=scale, window=window,
+                          logit_cap=logit_cap, block_kv=page,
+                          n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages, ks, vs)
+
+
+def paged_attention_fp8_ref(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, k_scale: jax.Array,
+                            v_scale: jax.Array, block_tables: jax.Array,
+                            lengths: jax.Array, *,
+                            window: int | None = None,
+                            logit_cap: float | None = None) -> jax.Array:
+    """jnp oracle for :func:`flash_decode_fp8`: dequantize the page pool
+    in fp32, then the dense masked softmax of :func:`paged_attention_ref`.
+    """
+    hkv = k_pages.shape[2]
+    ks = jnp.asarray(k_scale, jnp.float32).reshape(1, 1, hkv, 1)
+    vs = jnp.asarray(v_scale, jnp.float32).reshape(1, 1, hkv, 1)
+    return paged_attention_ref(q, k_pages.astype(jnp.float32) * ks,
+                               v_pages.astype(jnp.float32) * vs,
+                               block_tables, lengths, window=window,
+                               logit_cap=logit_cap)
 
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array,

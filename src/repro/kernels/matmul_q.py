@@ -1,0 +1,100 @@
+"""Quantized-weight GEMM Pallas kernel (w8a16/w8a32, fp32 accumulation).
+
+``C[M,N] = A[M,K] @ dequant(Wq[K,N])`` where ``Wq`` is int8 and the
+per-output-channel fp32 ``scale[N]`` is applied once at the epilogue —
+mathematically identical to dequantizing inside the reduction
+(``sum_k a*w*s == s * sum_k a*w`` because the scale depends only on the
+output channel), but the weight stream crosses the HBM->VMEM boundary at
+ONE byte per element.  That halved-or-quartered weight traffic is exactly
+what the dtype-aware blocking model (per-operand ``weight_bytes`` on
+``core.loopnest.Problem``) optimizes for, so the tiles come from the
+``"matmul_w8"`` schedule key (``repro.tune``), not the bf16 search.
+
+Grid order matches :mod:`repro.kernels.matmul_blocked`: (m, n, k) with k
+minor-most so the fp32 accumulator block stays VMEM-resident across the
+whole reduction (the paper's OB rule).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def vmem_bytes_required(bm: int, bk: int, bn: int,
+                        a_bytes: int = 2, w_bytes: int = 1) -> int:
+    """VMEM footprint of one grid step of :func:`matmul_w8`.
+
+    The A and Wq tiles are streamed at their own element widths (Pallas
+    double-buffers them, hence the factor 2); the output block plus the
+    fp32 accumulator scratch stay resident; the per-channel scale row is
+    double-buffered fp32.  Single source of truth for the ``"matmul_w8"``
+    schedule-candidate filter in ``tune.lowering``.
+    """
+    streamed = 2 * (bm * bk * a_bytes + bk * bn * w_bytes)
+    resident = bm * bn * (a_bytes + 4)
+    scale_row = 2 * bn * 4
+    return streamed + resident + scale_row
+
+
+def _matmul_w8_kernel(a_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)       # in-kernel int8 -> fp32
+    acc_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        # per-output-channel scale applied once, after the K reduction
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul_w8(a: jax.Array, w_q: jax.Array, scale: jax.Array, *,
+              bm: int, bk: int, bn: int,
+              interpret: bool = False) -> jax.Array:
+    """C[M,N] = A[M,K] @ (Wq[K,N] * scale[N]) tiled (bm, bk, bn).
+
+    ``w_q`` is int8; ``scale`` is fp32, either per-channel ``(N,)`` or a
+    per-tensor scalar (broadcast).  Dims must divide the tiles.
+    """
+    m, k = a.shape
+    k2, n = w_q.shape
+    assert k == k2, (a.shape, w_q.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{n})"
+    scale = jnp.broadcast_to(
+        jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_w8_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, w_q, scale)
+
+
+def matmul_w8_ref(a: jax.Array, w_q: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """jnp oracle: fp32 dequant-then-matmul.  Bit-comparable math to the
+    kernel (fp32 accumulate, scale in the epilogue); the correctness
+    oracle in tests and the ragged-shape fallback in ``kernels.ops``."""
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    acc = jnp.dot(a.astype(jnp.float32), w_q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return (acc * scale).astype(a.dtype)

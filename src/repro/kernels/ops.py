@@ -109,6 +109,28 @@ def matmul(a: jax.Array, b: jax.Array,
     return _matmul_vjp(tuple(tiles) if tiles else None, interpret)(a, b)
 
 
+def matmul_w8(a: jax.Array, w_q: jax.Array, scale: jax.Array,
+              tiles: tuple[int, int, int] | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """int8-weight GEMM ``A @ (Wq * scale)`` under the ``"matmul_w8"``
+    schedule key — the dtype-aware blocking search sizes the weight tile
+    at ONE byte per element, so its tiles differ from the bf16 GEMM's.
+
+    ``scale`` is fp32 per-output-channel ``(N,)`` or a per-tensor
+    scalar.  Inference-path op (no VJP); ragged shapes take the fp32
+    dequant oracle.
+    """
+    from repro.kernels.matmul_q import matmul_w8 as _kernel, matmul_w8_ref
+    m, k = a.shape
+    _, n = w_q.shape
+    interpret = default_interpret() if interpret is None else interpret
+    bm, bk, bn = tiles or best_schedule("matmul_w8", (m, n, k),
+                                        a.dtype.name).tiles
+    if m % bm or k % bk or n % bn:
+        return matmul_w8_ref(a, w_q, scale)
+    return _kernel(a, w_q, scale, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
 # ------------------------------- linear ------------------------------------
 
 _BLOCKED_LINEAR: contextvars.ContextVar[bool | None] = \
@@ -133,14 +155,35 @@ def blocked_linear(enable: bool = True):
         _BLOCKED_LINEAR.reset(tok)
 
 
-def linear(x: jax.Array, w: jax.Array,
-           interpret: bool | None = None) -> jax.Array:
+def linear(x: jax.Array, w, interpret: bool | None = None) -> jax.Array:
     """Projection ``x @ w`` for any-rank x; blocked + differentiable when
-    blocked linears are enabled (see :func:`blocked_linear`)."""
+    blocked linears are enabled (see :func:`blocked_linear`).
+
+    ``w`` may be a :class:`repro.quant.QuantizedTensor` (int8/fp8
+    payload + fp32 scale): on TPU — or whenever blocked linears are on —
+    2-D int8 weights route through the ``matmul_w8`` Pallas kernel
+    (in-kernel dequant, 1-byte weight stream); otherwise the fp32
+    dequant matmul runs, which is the fake-quant reference semantics.
+    """
+    from repro.quant.quantize import QuantizedTensor
+    if isinstance(w, QuantizedTensor):
+        return _quantized_linear(x, w, interpret)
     if not blocked_linear_enabled():
         return x @ w
     lead = x.shape[:-1]
     out = matmul(x.reshape(-1, x.shape[-1]), w, interpret=interpret)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def _quantized_linear(x: jax.Array, w, interpret: bool | None):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    use_kernel = (blocked_linear_enabled()
+                  or jax.default_backend() == "tpu")
+    if use_kernel and w.q.ndim == 2 and w.q.dtype == jnp.int8:
+        out = matmul_w8(x2, w.q, w.scale.reshape(-1), interpret=interpret)
+    else:
+        out = (x2 @ w.dequant(jnp.float32)).astype(x.dtype)
     return out.reshape(*lead, w.shape[-1])
 
 
@@ -252,6 +295,8 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_tables: jax.Array, lengths: jax.Array, *,
                     window: int | None = None,
                     logit_cap: float | None = None,
+                    k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None,
                     use_kernel: bool | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Single-token attention over a paged KV cache (decode path).
@@ -268,22 +313,48 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     jnp oracle runs elsewhere (the interpret-mode kernel is a correctness
     harness, not a CPU fast path); pass ``use_kernel=True`` to force the
     kernel (tests run it with ``interpret=True``).
+
+    A 1-byte page pool (fp8 KV cache) routes to the fp8 kernel variant,
+    whose schedule — and therefore the pool's page size — comes from the
+    fp8-aware ``"flash_decode_fp8"`` op key.  ``k_scale``/``v_scale``
+    are optional per-kv-head fp32 dequant scales (default: pure cast,
+    which is exactly the dense ``kv_cache_dtype=fp8`` semantics, keeping
+    the paged path token-exact against the fp8 dense path).
     """
-    from repro.kernels.flash_decode import flash_decode, paged_attention_ref
+    from repro.kernels.flash_decode import (flash_decode, flash_decode_fp8,
+                                            paged_attention_fp8_ref,
+                                            paged_attention_ref)
     b, hq, d = q.shape
     hkv = k_pages.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
+    fp8 = jnp.dtype(k_pages.dtype).itemsize == 1
+    scaled = k_scale is not None or v_scale is not None
+    if scaled and not fp8:
+        raise ValueError("k_scale/v_scale require a 1-byte (fp8) page pool")
+    if fp8:
+        # unit scales = pure-cast semantics, shared by kernel and oracle
+        ks = jnp.ones(hkv, jnp.float32) if k_scale is None else k_scale
+        vs = jnp.ones(hkv, jnp.float32) if v_scale is None else v_scale
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if os.environ.get("REPRO_REF_ATTENTION"):
         use_kernel = False
     if use_kernel:
         interpret = default_interpret() if interpret is None else interpret
-        out = flash_decode(qg, k_pages, v_pages, block_tables, lengths,
-                           window=window, logit_cap=logit_cap,
-                           interpret=interpret)
+        if fp8:
+            out = flash_decode_fp8(qg, k_pages, v_pages, ks, vs,
+                                   block_tables, lengths, window=window,
+                                   logit_cap=logit_cap, interpret=interpret)
+        else:
+            out = flash_decode(qg, k_pages, v_pages, block_tables, lengths,
+                               window=window, logit_cap=logit_cap,
+                               interpret=interpret)
+    elif fp8 and scaled:
+        out = paged_attention_fp8_ref(qg, k_pages, v_pages, ks, vs,
+                                      block_tables, lengths, window=window,
+                                      logit_cap=logit_cap)
     else:
         out = paged_attention_ref(qg, k_pages, v_pages, block_tables,
                                   lengths, window=window,

@@ -7,11 +7,17 @@
     # paged continuous batching (tuned KV page size, mixed prompt lengths)
     python -m repro.launch.serve --arch gemma2-9b --reduced --engine paged \
         --batch 8 --requests 16 --prompt-len 16 --mixed-lens --gen 32
+
+    # quantized serving: int8 weights + fp8 KV page pool (page size from
+    # the fp8-aware blocking model; docs/quantization.md)
+    python -m repro.launch.serve --arch gemma2-9b --reduced --engine paged \
+        --batch 8 --gen 32 --quantize w8fp8
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -44,11 +50,25 @@ def main() -> None:
                     help="paged: KV page size (0 -> tuned via the "
                          "flash_decode schedule key)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quantize", choices=("none", "w8", "fp8kv", "w8fp8"),
+                    default="none",
+                    help="w8: int8 projection weights (matmul_w8 kernel); "
+                         "fp8kv: fp8 KV page pool (fp8 flash-decode + "
+                         "fp8-aware page size); w8fp8: both")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.quantize in ("fp8kv", "w8fp8"):
+        cfg = dataclasses.replace(cfg,
+                                  kv_cache_dtype=jax.numpy.float8_e4m3fn)
     set_axis_mapping({"data": None, "model": None})
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    if args.quantize in ("w8", "w8fp8"):
+        from repro.quant import quantize_params, quantized_bytes
+        params = quantize_params(params)
+        qb, db = quantized_bytes(params)
+        print(f"quantized projection weights: {qb / 1e6:.1f} MB "
+              f"(same projections at bf16: {db / 1e6:.1f} MB)")
     rng = np.random.default_rng(0)
 
     if args.engine == "paged":

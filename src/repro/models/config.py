@@ -58,6 +58,9 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     kv_cache_dtype: Any = None  # None -> dtype; fp8 halves the decode
                                 # memory term (EXPERIMENTS.md §Perf it. 4)
+                                # and routes paged decode through the
+                                # fp8 flash-decode kernel + page sizing
+                                # (docs/quantization.md)
 
     # training
     remat: str = "block"        # "none" | "block" | "full" | "dots"
@@ -68,6 +71,23 @@ class ModelConfig:
                                self.d_model // self.n_heads)
         if self.lru_width == 0:
             object.__setattr__(self, "lru_width", self.d_model)
+        if self.kv_cache_dtype is not None:
+            # validate at construction: every downstream consumer
+            # (models/layers.py cache defs, serve/kv_cache.py pools,
+            # launch/dryrun.py --kv8) casts K/V into this dtype silently,
+            # so an unsupported width must fail HERE, loudly.
+            try:
+                dt = jnp.dtype(self.kv_cache_dtype)
+            except TypeError as exc:
+                raise ValueError(
+                    f"kv_cache_dtype is not a dtype: "
+                    f"{self.kv_cache_dtype!r} ({exc})") from None
+            if not (jnp.issubdtype(dt, jnp.floating)
+                    and dt.itemsize in (1, 2, 4)):
+                raise ValueError(
+                    "kv_cache_dtype must be a floating dtype of width "
+                    "1/2/4 bytes (float8_e4m3fn / float8_e5m2, "
+                    f"bfloat16 / float16, float32); got {dt.name}")
 
     @property
     def is_encdec(self) -> bool:

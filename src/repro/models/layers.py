@@ -146,9 +146,12 @@ def qkv_decode_proj(cfg: ModelConfig, params: dict, x: jax.Array,
     Returns q (B, Hq, D), k/v (B, Hkv, D)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = (x @ params["wq"]).reshape(b, 1, hq, hd)
-    k = (x @ params["wk"]).reshape(b, 1, hkv, hd)
-    v = (x @ params["wv"]).reshape(b, 1, hkv, hd)
+    # ops.linear (not a bare @): quantized params carry QuantizedTensor
+    # projection weights, which linear dispatches to the w8 kernel /
+    # dequant oracle (docs/quantization.md)
+    q = ops.linear(x, params["wq"]).reshape(b, 1, hq, hd)
+    k = ops.linear(x, params["wk"]).reshape(b, 1, hkv, hd)
+    v = ops.linear(x, params["wv"]).reshape(b, 1, hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     return q[:, 0], k[:, 0], v[:, 0]
@@ -190,7 +193,7 @@ def attention_decode(cfg: ModelConfig, params: dict, x: jax.Array,
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgl,blhd->bhgd", probs, cv.astype(jnp.float32))
     out = out.reshape(b, 1, hq * hd).astype(x.dtype)
-    return out @ params["wo"], {"k": ck, "v": cv}
+    return ops.linear(out, params["wo"]), {"k": ck, "v": cv}
 
 
 def attention_cache_defs(cfg: ModelConfig, batch: int, max_seq: int,

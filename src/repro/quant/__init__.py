@@ -1,0 +1,27 @@
+"""Quantization subsystem (docs/quantization.md).
+
+Element width is a first-class blocking parameter: the paper's access /
+energy model counts traffic in *bytes*, so halving bytes-per-element
+lets twice the tile fit in the same buffer and shifts the optimal
+schedule.  This package supplies the quantized representations
+(``quantize``), data-driven activation calibration (``calibrate``),
+quantized-parameter containers for whole models (``params``), and the
+fake-quant accuracy harness (``fakequant``); the dtype-aware model
+lives in ``core`` (per-operand widths on ``loopnest.Problem``), the
+kernels in ``kernels/matmul_q.py`` and the fp8 flash-decode variant,
+and the schedule plumbing under the ``"matmul_w8"`` /
+``"flash_decode_fp8"`` tune op keys.
+"""
+
+from repro.quant.calibrate import AbsMaxCalibrator
+from repro.quant.fakequant import logit_report
+from repro.quant.params import (QUANT_KEYS, dequantize_params,
+                                quantize_params, quantized_bytes)
+from repro.quant.quantize import (FP8_MAX, INT8_MAX, QuantizedTensor,
+                                  fake_quant, quantize)
+
+__all__ = [
+    "AbsMaxCalibrator", "FP8_MAX", "INT8_MAX", "QUANT_KEYS",
+    "QuantizedTensor", "dequantize_params", "fake_quant", "logit_report",
+    "quantize", "quantize_params", "quantized_bytes",
+]

@@ -1,0 +1,67 @@
+"""Activation calibration: observed ranges -> quantization scales.
+
+Weights are quantized from their own values (``quant.quantize``), but
+activation scales (the ``a8`` half of w8a8) must come from *data* — the
+ranges a layer actually sees.  The calibrator accumulates per-leaf
+statistics over observation batches and emits scales compatible with
+:mod:`repro.quant.quantize`.
+
+Two estimators:
+
+* ``absmax``     — running max of |x| (exact range, outlier-sensitive);
+* ``ema_absmax`` — exponential moving average of the per-batch absmax
+  (the standard PTQ smoothing for spiky activations; ``momentum``
+  controls the horizon).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QUANT_DTYPES, _EPS
+
+
+class AbsMaxCalibrator:
+    """Running per-leaf activation-range tracker.
+
+    ``observe(tree)`` folds one batch of activations (any pytree of
+    arrays) into the running statistics; ``scales(dtype)`` returns the
+    matching pytree of fp32 scalar scales.  Leaves are matched by tree
+    structure, so observe the same structure every time.
+    """
+
+    def __init__(self, momentum: float | None = None):
+        if momentum is not None and not 0.0 < momentum < 1.0:
+            raise ValueError(f"momentum must be in (0, 1), got {momentum}")
+        self.momentum = momentum
+        self._absmax: Any = None
+        self.n_batches = 0
+
+    def observe(self, tree: Any) -> None:
+        batch_max = jax.tree.map(
+            lambda x: jnp.max(jnp.abs(x.astype(jnp.float32))), tree)
+        if self._absmax is None:
+            self._absmax = batch_max
+        elif self.momentum is None:
+            self._absmax = jax.tree.map(jnp.maximum, self._absmax,
+                                        batch_max)
+        else:
+            m = self.momentum
+            self._absmax = jax.tree.map(
+                lambda old, new: m * old + (1.0 - m) * new,
+                self._absmax, batch_max)
+        self.n_batches += 1
+
+    def scales(self, dtype: str = "int8") -> Any:
+        """Per-leaf fp32 scales such that observed values quantize into
+        the target dtype's representable range."""
+        if self._absmax is None:
+            raise ValueError("no batches observed yet")
+        if dtype not in QUANT_DTYPES:
+            raise ValueError(f"unknown quant dtype {dtype!r}; "
+                             f"expected one of {sorted(QUANT_DTYPES)}")
+        _, qmax = QUANT_DTYPES[dtype]
+        return jax.tree.map(lambda a: a / qmax + _EPS, self._absmax)

@@ -1,0 +1,53 @@
+"""Fake-quant accuracy harness: quantized model vs its fp reference.
+
+The contract the subsystem is tested against has two layers:
+
+1. *kernel == fake-quant oracle* — the int8/fp8 Pallas kernels must
+   reproduce the fp32 dequant-then-compute reference bit-for-bit in
+   fp32 math (tests/test_quant.py);
+2. *quantized model ~= fp model* — running the transformer with
+   QuantizedTensor weights must track the original logits within the
+   error the quantization itself introduces.  This module measures
+   that: logit-level error and top-1 agreement over sample prompts.
+
+``logit_report`` is cheap enough for tests on reduced configs and is
+what ``benchmarks/quant_bench.py`` prints for the accuracy column.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def logit_report(cfg: Any, params: Any, qparams: Any,
+                 tokens: Any) -> dict:
+    """Compare full-sequence logits of ``params`` vs ``qparams``.
+
+    ``tokens``: (B, S) int32 prompts.  Returns max/mean absolute logit
+    error, the same normalized by the fp logit scale, and per-position
+    top-1 agreement — the numbers a deployment gate would threshold.
+    """
+    from repro.models import transformer as T
+
+    tokens = jnp.asarray(tokens, jnp.int32)
+
+    @jax.jit
+    def logits_of(p):
+        h, _ = T.forward(cfg, p, tokens)
+        return T.logits_fn(cfg, p, h).astype(jnp.float32)
+
+    ref = np.asarray(logits_of(params))[..., :cfg.vocab]
+    got = np.asarray(logits_of(qparams))[..., :cfg.vocab]
+    err = np.abs(got - ref)
+    agree = np.mean(np.argmax(got, -1) == np.argmax(ref, -1))
+    denom = max(float(np.max(np.abs(ref))), 1e-9)
+    return {
+        "max_abs_err": float(np.max(err)),
+        "mean_abs_err": float(np.mean(err)),
+        "rel_err": float(np.max(err) / denom),
+        "top1_agreement": float(agree),
+    }

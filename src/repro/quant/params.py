@@ -1,0 +1,100 @@
+"""Quantized-parameter containers for the transformer param tree.
+
+``quantize_params`` walks a built parameter tree (``transformer.
+init_params`` output, including ``lax.scan``-stacked layer groups) and
+replaces the dense projection weights with :class:`QuantizedTensor`
+leaves — int8 payload + per-output-channel fp32 scales.  Because
+``QuantizedTensor`` is a pytree, the result drops into every existing
+``jit``-ed path (engines, decode steps, prefill) unchanged; the matmul
+sites dispatch through ``kernels.ops.linear``, which routes quantized
+weights to the ``matmul_w8`` Pallas kernel (TPU / blocked-linear mode)
+or the fp32 dequant oracle elsewhere.
+
+What gets quantized: the attention projections (wq/wk/wv/wo) and the
+dense MLP mats (w_up/w_down/w_gate).  What stays wide: norms and other
+1-D leaves, embeddings / lm_head (tied embeddings serve double duty and
+the vocab matmul is logit-accuracy-critical), MoE expert banks (their
+einsum dispatch path doesn't route through ``ops.linear`` — recognized
+by the sibling ``router`` leaf), and the recurrent/SSD mixers.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QuantizedTensor, quantize
+
+QUANT_KEYS = frozenset({"wq", "wk", "wv", "wo",
+                        "w_up", "w_down", "w_gate"})
+
+
+def _quantizable(key: str, leaf: Any, keys: frozenset[str]) -> bool:
+    return (key in keys
+            and hasattr(leaf, "ndim") and leaf.ndim >= 2
+            and jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating))
+
+
+def quantize_params(params: Any, dtype: str = "int8",
+                    keys: frozenset[str] = QUANT_KEYS) -> Any:
+    """Replace projection-weight leaves with QuantizedTensor containers.
+
+    Per-output-channel scales (absmax over the contraction dim), so a
+    stacked ``(n_groups, K, N)`` weight gets ``(n_groups, 1, N)`` scales
+    and each scanned slice is exactly the 2-D kernel layout.
+    """
+    def rec(node: Any) -> Any:
+        if isinstance(node, dict):
+            if "router" in node:          # MoE expert bank: keep wide
+                return node
+            # "cross" (enc-dec cross-attention) stays wide: its K/V
+            # prefill path multiplies weights outside ops.linear
+            return {k: (node[k] if k == "cross"
+                        else quantize(v, dtype, reduce_axis=-2)
+                        if _quantizable(k, v, keys) else rec(v))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [rec(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(rec(v) for v in node)
+        return node
+
+    return rec(params)
+
+
+def dequantize_params(params: Any, dtype: Any = None) -> Any:
+    """Widen every QuantizedTensor leaf back to a dense array — the
+    fake-quant reference tree: running the ORIGINAL model code on this
+    tree defines the accuracy target for the quantized kernels."""
+    def widen(leaf: Any) -> Any:
+        if isinstance(leaf, QuantizedTensor):
+            return leaf.dequant(dtype or jnp.float32)
+        return leaf
+
+    return jax.tree.map(widen, params,
+                        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def quantized_bytes(params: Any) -> tuple[int, int]:
+    """(container_bytes, bf16_dense_bytes) over the QuantizedTensor
+    leaves ONLY — the projection-weight storage the containers shrink.
+
+    Unquantized leaves (norms, embeddings, MoE banks, ...) are excluded
+    from BOTH totals, so the ratio compares the quantized projections'
+    int8-payload+fp32-scale containers against the same projections at
+    bf16 deployment width — not against whatever dtype the source tree
+    happened to be built in.  Reported by benchmarks/quant_bench.py and
+    ``launch/serve --quantize``.
+    """
+    q_total = 0
+    d_total = 0
+    leaves = jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    for leaf in leaves:
+        if isinstance(leaf, QuantizedTensor):
+            q_total += leaf.q.size * leaf.q.dtype.itemsize + \
+                leaf.scale.size * 4
+            d_total += leaf.q.size * 2          # bf16 dense equivalent
+    return q_total, d_total

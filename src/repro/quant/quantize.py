@@ -1,0 +1,104 @@
+"""Quantized tensors: per-channel / per-tensor scales for int8 and fp8.
+
+The representation is deliberately minimal — a narrow payload plus an
+fp32 scale, registered as a jax pytree so quantized weights flow through
+``jit`` / ``lax.scan`` / shardings exactly like plain arrays.  Everything
+else in the subsystem (the dtype-aware blocking model, the Pallas
+kernels, the serving engines) keys off the payload dtype's *itemsize*:
+one byte per element is the whole point.
+
+Scale conventions:
+
+* ``reduce_axis=-2`` (default) — per-output-channel weight scales: for a
+  projection ``W[K, N]`` the absmax reduces over the contraction dim K,
+  leaving one fp32 scale per output channel ``(1, N)``.  A stacked
+  ``lax.scan`` weight ``(G, K, N)`` gets ``(G, 1, N)`` — each scanned
+  slice is exactly the 2-D case.
+* ``reduce_axis=None`` — per-tensor: one scalar scale (shape all-ones).
+
+``sum_k a[m,k] * (q[k,n] * s[n]) == s[n] * sum_k a[m,k] * q[k,n]`` —
+the scale depends only on the *output* channel, which is what lets the
+kernels accumulate the narrow payload in fp32 and apply the scale once
+at the epilogue (``kernels/matmul_q.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+FP8_MAX = 448.0        # float8_e4m3fn finfo.max
+_EPS = 1e-12
+
+QUANT_DTYPES = {
+    "int8": (jnp.int8, INT8_MAX),
+    "fp8": (jnp.float8_e4m3fn, FP8_MAX),
+}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A narrow payload + fp32 dequantization scale (a jax pytree)."""
+
+    q: Any              # int8 or float8_e4m3fn array
+    scale: Any          # fp32, broadcastable to q.shape
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.q.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequant(self, dtype: Any = jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    # -- pytree protocol ------------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def quantize(x: jax.Array, dtype: str = "int8",
+             reduce_axis: int | None = -2) -> QuantizedTensor:
+    """Absmax-quantize ``x`` to int8 or fp8 (e4m3).
+
+    ``reduce_axis`` is the axis the absmax reduces over (the contraction
+    dim for weights, giving per-output-channel scales); ``None`` reduces
+    everything (per-tensor scale).
+    """
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"unknown quant dtype {dtype!r}; "
+                         f"expected one of {sorted(QUANT_DTYPES)}")
+    target, qmax = QUANT_DTYPES[dtype]
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(x.ndim)) if reduce_axis is None else (reduce_axis,)
+    absmax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = absmax / qmax + _EPS
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(xf / scale), -INT8_MAX, INT8_MAX)
+    else:
+        q = xf / scale        # e4m3 round happens in the cast below
+    return QuantizedTensor(q.astype(target), scale)
+
+
+def fake_quant(x: jax.Array, dtype: str = "int8",
+               reduce_axis: int | None = -2) -> jax.Array:
+    """Quantize-dequantize round trip in ``x.dtype`` — the reference
+    semantics every quantized kernel must match (see tests/test_quant.py
+    and the :mod:`repro.quant.fakequant` accuracy harness)."""
+    return quantize(x, dtype, reduce_axis).dequant(x.dtype)

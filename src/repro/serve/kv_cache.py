@@ -50,11 +50,20 @@ def choose_page_size(cfg: ModelConfig, max_seq: int,
     an S-long cache of head dim D.  A tuned entry in the schedule cache
     (``python -m repro.tune flash_decode ...``) wins; otherwise the
     analytic top candidate is used.
+
+    An fp8 cache (``kv_cache_dtype`` of width 1) sizes its pages under
+    the ``"flash_decode_fp8"`` key instead: the dtype-aware search sees
+    the 1-byte page stream, so the fp8 pool's page size — and the fp8
+    kernel's KV block — both come from the fp8 model, not the bf16 one.
     """
     from repro.tune import best_schedule
     g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
-    dtype_name = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype).name
-    sched = best_schedule("flash_decode", (g, max_seq, cfg.head_dim),
+    kv_dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    if kv_dtype.itemsize == 1:
+        op, dtype_name = "flash_decode_fp8", jnp.dtype(cfg.dtype).name
+    else:
+        op, dtype_name = "flash_decode", kv_dtype.name
+    sched = best_schedule(op, (g, max_seq, cfg.head_dim),
                           dtype_name, cache=cache)
     return max(1, min(sched.tiles[0], max_seq))
 
@@ -199,7 +208,8 @@ def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
                                   use_kernel=use_kernel,
                                   interpret=interpret)
         out = out.reshape(b, 1, hq * hd).astype(hn.dtype)
-        return out @ p["wo"], {"k_pages": kp, "v_pages": vp}
+        # ops.linear: wo may be a QuantizedTensor (quantized serving)
+        return ops.linear(out, p["wo"]), {"k_pages": kp, "v_pages": vp}
 
     return attn_step
 

@@ -24,13 +24,15 @@ from repro.core.tpu_adapter import TPU_V5E, TpuTarget
 from repro.tune.cache import ScheduleCache, default_cache_path, device_kind
 from repro.tune.lowering import (candidates, divides, fits_vmem,
                                  predicted_dram_accesses,
+                                 predicted_dram_bytes,
                                  schedule_to_string, vmem_budget)
 from repro.tune.schedule import OpSpec, Schedule
 
 __all__ = [
     "OpSpec", "Schedule", "ScheduleCache", "best_schedule", "candidates",
     "default_cache_path", "describe_candidates", "device_kind",
-    "predicted_dram_accesses", "schedule_to_string", "tune_op",
+    "predicted_dram_accesses", "predicted_dram_bytes",
+    "schedule_to_string", "tune_op",
 ]
 
 _default_cache = ScheduleCache()

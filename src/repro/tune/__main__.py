@@ -26,12 +26,13 @@ def main(argv: list[str] | None = None) -> None:
     from repro.tune.schedule import OPS
     ap.add_argument("op", choices=OPS)
     ap.add_argument("dims", type=int, nargs="+",
-                    help="GEMM ops (matmul, matmul_dgrad): M N K; conv "
-                         "ops (conv2d, conv2d_dgrad, conv2d_wgrad): "
-                         "X Y C K Fw Fh (output-space X/Y; see "
-                         "docs/training.md for the backward conventions); "
-                         "flash_decode: G S D (GQA group size, max KV "
-                         "length, head dim; see docs/serving.md)")
+                    help="GEMM ops (matmul, matmul_dgrad, matmul_w8): "
+                         "M N K; conv ops (conv2d, conv2d_dgrad, "
+                         "conv2d_wgrad): X Y C K Fw Fh (output-space X/Y; "
+                         "see docs/training.md for the backward "
+                         "conventions); flash_decode[_fp8]: G S D (GQA "
+                         "group size, max KV length, head dim; see "
+                         "docs/serving.md and docs/quantization.md)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--stride", type=int, default=1)
     ap.add_argument("--top-n", type=int, default=3,

@@ -24,6 +24,13 @@ candidate search and scoring are reused with relabelled dims — see
 whose reduction dim is the KV length; its single tile ``(block_kv,)`` is
 both the kernel's KV block and the paged cache's page size — see
 ``core.tpu_adapter.flash_decode_tile_candidates``.
+
+The quantized variants (``matmul_w8`` / ``flash_decode_fp8``,
+docs/quantization.md) reuse the same nests with a 1-byte weight / KV
+stream: their specs' ``problem()`` carries per-operand byte widths, so
+the candidate search, the VMEM fit (each quantized kernel's own
+footprint model) and :func:`predicted_dram_bytes` all see the narrow
+operand, while dims/tiles keep the wide ops' conventions.
 """
 
 from __future__ import annotations
@@ -36,7 +43,8 @@ from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
                                     default_vmem_budget,
                                     flash_decode_tile_candidates,
                                     matmul_tile_candidates)
-from repro.tune.schedule import ATTN_OPS, GEMM_OPS, OpSpec, Schedule
+from repro.tune.schedule import (ATTN_OPS, GEMM_OPS, NARROW_WEIGHT_BYTES,
+                                 OpSpec, Schedule)
 
 # the one budget rule, shared with the snap loops in core.tpu_adapter
 vmem_budget = default_vmem_budget
@@ -51,6 +59,11 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
     (which runs the forward kernel), and the wgrad kernel has its own
     (resident dW block, streamed input/cotangent tiles).
     """
+    if spec.op == "matmul_w8":
+        from repro.kernels.matmul_q import vmem_bytes_required
+        bm, bk, bn = tiles
+        return vmem_bytes_required(bm, bk, bn, spec.itemsize,
+                                   NARROW_WEIGHT_BYTES[spec.op]) <= budget
     if spec.op in GEMM_OPS:
         from repro.kernels.matmul_blocked import vmem_bytes_required
         bm, bk, bn = tiles
@@ -59,7 +72,9 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
         from repro.kernels.flash_decode import vmem_bytes_required
         G, _, D = spec.dims
         (bkv,) = tiles
-        return vmem_bytes_required(bkv, G, D, spec.itemsize) <= budget
+        return vmem_bytes_required(
+            bkv, G, D, spec.itemsize,
+            kv_bytes=NARROW_WEIGHT_BYTES.get(spec.op)) <= budget
     if spec.op == "conv2d_wgrad":
         from repro.kernels.conv2d_bwd import vmem_bytes_required
     else:
@@ -163,6 +178,32 @@ def predicted_dram_accesses(spec: OpSpec, tiles: tuple[int, ...],
     return cache_accesses(s, levels)[levels[-1].name]
 
 
+def predicted_dram_bytes(spec: OpSpec, tiles: tuple[int, ...],
+                         vmem_budget_bytes: int | None = None,
+                         target: TpuTarget = TPU_V5E) -> int:
+    """HBM-boundary traffic in BYTES, weighting each operand's accesses
+    by its own element width (``core.buffers.operand_bytes``).
+
+    Element *counts* are dtype-invariant — :func:`predicted_dram_accesses`
+    reports the same number for a bf16 and an int8 weight stream — so
+    this is the quantity that shows what quantization buys: the same
+    schedule moves half (or a quarter) of the bytes.  Shares the exact
+    placement walk of the access-count rank (``core.hierarchy.
+    cache_accesses`` with per-operand byte weights), so the two ranks
+    cannot disagree about the miss-path rules.
+    """
+    if not divides(spec, tiles):
+        raise ValueError(
+            f"tiles {tiles} do not divide {spec.op} dims {spec.dims}")
+    from repro.core.buffers import Operand, operand_bytes
+    budget = vmem_budget(target, vmem_budget_bytes)
+    levels = [MemLevel.sram("VMEM", budget), MemLevel.dram("HBM")]
+    s = schedule_to_string(spec, tiles)
+    weights = {op: operand_bytes(s.problem, op) for op in Operand}
+    return cache_accesses(s, levels,
+                          operand_weights=weights)[levels[-1].name]
+
+
 def candidates(spec: OpSpec,
                vmem_budget_bytes: int | None = None,
                target: TpuTarget = TPU_V5E,
@@ -175,14 +216,16 @@ def candidates(spec: OpSpec,
     ``predicted_dram_accesses`` left unset.
     """
     budget = vmem_budget(target, vmem_budget_bytes)
-    if spec.op == "matmul":
+    if spec.op in ("matmul", "matmul_w8"):
         M, N, K = spec.dims
-        raw = matmul_tile_candidates(M, N, K, spec.itemsize, budget,
-                                     target, top=top)
-    elif spec.op == "flash_decode":
+        raw = matmul_tile_candidates(
+            M, N, K, spec.itemsize, budget, target, top=top,
+            weight_bytes=NARROW_WEIGHT_BYTES.get(spec.op))
+    elif spec.op in ("flash_decode", "flash_decode_fp8"):
         G, S, D = spec.dims
-        raw = flash_decode_tile_candidates(G, S, D, spec.itemsize,
-                                           budget, target, top=top)
+        raw = flash_decode_tile_candidates(
+            G, S, D, spec.itemsize, budget, target, top=top,
+            kv_bytes=NARROW_WEIGHT_BYTES.get(spec.op))
     elif spec.op == "conv2d":
         X, Y, C, K, Fw, Fh = spec.dims
         raw = conv_tile_candidates(X, Y, C, K, Fw, Fh, spec.itemsize,

@@ -34,21 +34,35 @@ def make_inputs(schedule: Schedule, seed: int = 0):
 
     spec = schedule.spec
     rng = np.random.default_rng(seed)
-    if spec.op == "flash_decode":
+    if spec.op in ("flash_decode", "flash_decode_fp8"):
         # one request, one kv head, paged cache laid out with THIS
         # schedule's block as the page size; a shuffled block table so
-        # the gather is genuinely indirect
+        # the gather is genuinely indirect.  The fp8 variant streams
+        # 1-byte pages plus per-head dequant scales.
         G, S, D = spec.dims
         (page,) = schedule.tiles
         n_blocks = -(-S // page)
+        page_dtype = (jnp.float8_e4m3fn if spec.op == "flash_decode_fp8"
+                      else spec.dtype)
         q = jnp.asarray(rng.normal(size=(1, 1, G, D)), spec.dtype)
         kp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
-                         spec.dtype)
+                         page_dtype)
         vp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
-                         spec.dtype)
+                         page_dtype)
         bt = jnp.asarray(rng.permutation(n_blocks)[None, :], jnp.int32)
         lengths = jnp.asarray([S], jnp.int32)
+        if spec.op == "flash_decode_fp8":
+            ks = jnp.asarray(rng.uniform(0.5, 2.0, size=(1,)), jnp.float32)
+            vs = jnp.asarray(rng.uniform(0.5, 2.0, size=(1,)), jnp.float32)
+            return q, kp, vp, ks, vs, bt, lengths
         return q, kp, vp, bt, lengths
+    if spec.op == "matmul_w8":
+        M, N, K = spec.dims
+        a = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
+        w_q = jnp.asarray(rng.integers(-127, 128, size=(K, N)), jnp.int8)
+        scale = jnp.asarray(rng.uniform(0.005, 0.05, size=(N,)),
+                            jnp.float32)
+        return a, w_q, scale
     if spec.op == "matmul_dgrad":
         M, N, K = spec.dims
         g = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
@@ -81,6 +95,15 @@ def run_once(schedule: Schedule, inputs, interpret: bool | None = None):
         from repro.kernels.flash_decode import flash_decode
         q, kp, vp, bt, lengths = inputs
         out = flash_decode(q, kp, vp, bt, lengths, interpret=interpret)
+    elif spec.op == "flash_decode_fp8":
+        from repro.kernels.flash_decode import flash_decode_fp8
+        q, kp, vp, ks, vs, bt, lengths = inputs
+        out = flash_decode_fp8(q, kp, vp, ks, vs, bt, lengths,
+                               interpret=interpret)
+    elif spec.op == "matmul_w8":
+        a, w_q, scale = inputs
+        out = ops.matmul_w8(a, w_q, scale, tiles=schedule.tiles,
+                            interpret=interpret)
     elif spec.op == "matmul_dgrad":
         from repro.kernels.matmul_bwd import matmul_dgrad_a
         g, b = inputs

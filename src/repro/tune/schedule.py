@@ -28,6 +28,18 @@ Serving adds one more memory-bound nest:
   paged cache (``serve/kv_cache.py``), so the analytical model fixes
   both at once.
 
+Quantization adds dtype-aware variants of the two serving-critical
+nests (docs/quantization.md).  Their SHAPE dims match the wide ops, but
+their ``problem()`` carries per-operand byte widths, so the blocking
+search sizes tiles against the narrow stream and the schedules land
+under their own cache keys:
+
+* ``matmul_w8``: ``dims = (M, N, K)``; the weight operand is int8
+  (1 byte), activations/outputs at ``dtype``'s width — w8a16/w8a32;
+* ``flash_decode_fp8``: ``dims = (G, S, D)``; the streamed K/V pages
+  are fp8 (1 byte) while q and the fp32 running state keep ``dtype``.
+  Its ``(block_kv,)`` is the FP8 page pool's page size.
+
 A :class:`Schedule` is a concrete kernel configuration for that spec: the
 Pallas tile tuple (``(bm, bk, bn)`` or ``(bx, by, bc, bk)``), where it came
 from (``analytic`` / ``measured`` / ``cache`` / ``override``), the model's
@@ -43,15 +55,20 @@ import numpy as np
 
 from repro.core.loopnest import Problem
 
-GEMM_OPS = ("matmul", "matmul_dgrad")
+GEMM_OPS = ("matmul", "matmul_dgrad", "matmul_w8")
 CONV_OPS = ("conv2d", "conv2d_dgrad", "conv2d_wgrad")
-ATTN_OPS = ("flash_decode",)
+ATTN_OPS = ("flash_decode", "flash_decode_fp8")
 OPS = GEMM_OPS + CONV_OPS + ATTN_OPS
+# quantized ops: the narrow operand (weights / KV pages) is 1 byte wide
+# regardless of the spec's activation dtype
+NARROW_WEIGHT_BYTES = {"matmul_w8": 1, "flash_decode_fp8": 1}
 TILE_RANK = {op: (3 if op in GEMM_OPS else 4) for op in GEMM_OPS + CONV_OPS}
 # flash_decode tunes ONE size: the KV block — which is also the paged
 # cache's page size (serve/kv_cache.py), so cache layout and kernel
-# schedule cannot disagree.
+# schedule cannot disagree.  Same contract for the fp8 variant, under
+# its own key (the fp8-aware search typically picks larger pages).
 TILE_RANK["flash_decode"] = 1
+TILE_RANK["flash_decode_fp8"] = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,11 +103,19 @@ class OpSpec:
             return int(np.dtype(getattr(ml_dtypes, self.dtype)).itemsize)
 
     def problem(self) -> Problem:
-        """The spec as the paper's loop-nest Problem."""
+        """The spec as the paper's loop-nest Problem.
+
+        Quantized ops carry per-operand widths: the weight operand of
+        the GEMM nest (which is also the streamed K/V of the decode
+        nest — see ``tune.lowering``) narrows to 1 byte, so the access
+        model counts its traffic and sizes its buffers accordingly.
+        """
+        wb = NARROW_WEIGHT_BYTES.get(self.op)
         if self.op in GEMM_OPS:
             M, N, K = self.dims
             return Problem.gemm(M=M, N_cols=N, K_reduce=K,
-                                bytes_per_elem=self.itemsize)
+                                bytes_per_elem=self.itemsize,
+                                weight_bytes=wb)
         if self.op in ATTN_OPS:
             # decode attention per (batch, kv-head): the G query rows
             # stream over the S-long KV cache producing D outputs — a
@@ -98,7 +123,8 @@ class OpSpec:
             # is the KV length being blocked.
             G, S, D = self.dims
             return Problem.gemm(M=G, N_cols=D, K_reduce=S,
-                                bytes_per_elem=self.itemsize)
+                                bytes_per_elem=self.itemsize,
+                                weight_bytes=wb)
         X, Y, C, K, Fw, Fh = self.dims
         return Problem(X=X, Y=Y, C=C, K=K, Fw=Fw, Fh=Fh,
                        stride=self.stride, bytes_per_elem=self.itemsize)

@@ -115,18 +115,19 @@ def test_energy_positive_and_finite(data):
 
 @st.composite
 def backward_spec(draw):
-    """A random non-forward OpSpec (backward nests + the serving
-    flash_decode nest) the tune pipeline must produce valid schedules
-    for."""
+    """A random non-forward OpSpec (backward nests, the serving
+    flash_decode nest, and the quantized matmul_w8/flash_decode_fp8
+    variants) the tune pipeline must produce valid schedules for."""
     from repro.tune import OpSpec
     op = draw(st.sampled_from(["matmul_dgrad", "conv2d_dgrad",
-                               "conv2d_wgrad", "flash_decode"]))
-    if op == "flash_decode":
+                               "conv2d_wgrad", "flash_decode",
+                               "matmul_w8", "flash_decode_fp8"]))
+    if op in ("flash_decode", "flash_decode_fp8"):
         dims = (draw(st.sampled_from([1, 2, 4, 8])),        # GQA groups
                 draw(st.sampled_from([64, 256, 1024, 4096])),  # KV length
                 draw(st.sampled_from([16, 64, 128, 256])))  # head dim
         return OpSpec(op, dims)
-    if op == "matmul_dgrad":
+    if op in ("matmul_dgrad", "matmul_w8"):
         dims = (draw(st.sampled_from([8, 64, 96, 256])),
                 draw(st.sampled_from([32, 128, 384])),
                 draw(st.sampled_from([16, 64, 512])))
@@ -185,6 +186,58 @@ def test_backward_cache_round_trip(data):
     assert got.tiles == tiles
     assert got.predicted_dram_accesses == sched.predicted_dram_accesses
     assert got.measured_us == sched.measured_us
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_narrower_dtype_never_shrinks_level0_tile(data):
+    """INVARIANT (dtype-aware blocking): under a fixed SRAM budget,
+    shrinking bytes-per-element never shrinks the level-0 tile the
+    kernel can hold.  Concretely: every tile that fits the budget at
+    the wide op (matmul / flash_decode) still fits at its quantized
+    variant (matmul_w8 / flash_decode_fp8, 1-byte weight/KV stream), so
+    the largest admissible tile is monotone non-decreasing — and at any
+    shared tile the predicted DRAM *bytes* only go down."""
+    from repro.core.loopnest import divisors
+    from repro.tune import OpSpec, predicted_dram_bytes
+    from repro.tune.lowering import divides, fits_vmem
+
+    budget = data.draw(st.sampled_from([64 * 1024, 256 * 1024,
+                                        1024 * 1024]))
+    if data.draw(st.booleans()):
+        M = data.draw(st.sampled_from([32, 64, 256]))
+        N = data.draw(st.sampled_from([64, 128, 512]))
+        K = data.draw(st.sampled_from([64, 256, 1024]))
+        wide = OpSpec("matmul", (M, N, K), "bfloat16")
+        narrow = OpSpec("matmul_w8", (M, N, K), "bfloat16")
+        tiles = [(bm, bk, bn)
+                 for bm in divisors(M)[-4:]
+                 for bk in divisors(K)[-4:]
+                 for bn in divisors(N)[-4:]]
+    else:
+        G = data.draw(st.sampled_from([1, 4, 8]))
+        S = data.draw(st.sampled_from([256, 1024, 8192]))
+        D = data.draw(st.sampled_from([64, 128, 256]))
+        wide = OpSpec("flash_decode", (G, S, D), "bfloat16")
+        narrow = OpSpec("flash_decode_fp8", (G, S, D), "bfloat16")
+        tiles = [(bkv,) for bkv in divisors(S)]
+
+    def volume(t):
+        v = 1
+        for x in t:
+            v *= x
+        return v
+
+    fit_wide = [t for t in tiles if fits_vmem(wide, t, budget)]
+    fit_narrow = [t for t in tiles if fits_vmem(narrow, t, budget)]
+    for t in fit_wide:
+        assert t in fit_narrow, (wide.op, t, budget)
+    if fit_wide:
+        assert max(map(volume, fit_narrow)) >= max(map(volume, fit_wide))
+    for t in fit_wide:
+        if divides(wide, t):
+            assert predicted_dram_bytes(narrow, t, budget) <= \
+                predicted_dram_bytes(wide, t, budget), (wide.op, t)
 
 
 @settings(max_examples=20, deadline=None)
