@@ -33,9 +33,30 @@ def cached(key: str, fn: Callable[[], dict]) -> dict:
     return value
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The driver's CSV contract: name,us_per_call,derived."""
+_RECORDS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str, **fields) -> None:
+    """The driver's CSV contract: name,us_per_call,derived.
+
+    Extra keyword ``fields`` (modeled/measured DRAM bytes, tok/s, ...)
+    ride along into the JSON record only — the CSV line is unchanged.
+    Every emit is collected so benchmarks can dump a machine-readable
+    trajectory file (BENCH_kernels.json / BENCH_serve.json) via
+    :func:`write_json`.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": derived, **fields})
+
+
+def write_json(path: str) -> None:
+    """Dump every record emitted so far (one benchmark run) to ``path``
+    — the cross-PR perf-trajectory contract."""
+    with open(path, "w") as f:
+        json.dump({"version": 1, "records": _RECORDS}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(_RECORDS)} records to {path}")
 
 
 def timed(fn: Callable) -> tuple[float, object]:

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro.configs import get_reduced
 from repro.models import transformer as T
 from repro.serve.engine import (DecodeEngine, PagedEngine, PagedServeConfig,
@@ -105,6 +105,13 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model + workload for CI")
+    ap.add_argument("--fuse", action="store_true",
+                    help="also run the paged engine with cross-op "
+                         "fused kernels (docs/fusion.md) and report a "
+                         "fused-vs-unfused section")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every record as machine-readable "
+                         "JSON (the BENCH_serve.json trajectory file)")
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.gen, args.prompt_len = 6, 8, 12
@@ -144,11 +151,39 @@ def main() -> None:
     p50, p95 = np.percentile(np.asarray(p_steps) * 1e6, [50, 95])
     emit("serve_static", s_wall / max(s_useful, 1) * 1e6,
          f"{s_tps:.1f} tok/s p50={s50:.0f}us p95={s95:.0f}us "
-         f"useful={s_useful}")
+         f"useful={s_useful}",
+         tok_s=round(s_tps, 2), p50_us=round(s50, 1),
+         p95_us=round(s95, 1), useful_tokens=int(s_useful))
     emit("serve_paged", p_wall / max(p_useful, 1) * 1e6,
          f"{p_tps:.1f} tok/s p50={p50:.0f}us p95={p95:.0f}us "
          f"useful={p_useful} page={page} "
-         f"speedup={p_tps / max(s_tps, 1e-9):.2f}x")
+         f"speedup={p_tps / max(s_tps, 1e-9):.2f}x",
+         tok_s=round(p_tps, 2), p50_us=round(p50, 1),
+         p95_us=round(p95, 1), useful_tokens=int(p_useful),
+         page_size=int(page))
+
+    if args.fuse:
+        # fused-vs-unfused paged section: same workload, same slots,
+        # cross-op fused kernels on the hot path; greedy decoding makes
+        # the outputs comparable token-for-token with the run above
+        fused = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=args.max_seq, max_batch=args.max_batch,
+            page_size=args.page_size or None, fuse=True))
+        run_paged(fused, prompts, gens)          # warm compiles
+        f_wall, f_useful, f_steps = run_paged(fused, prompts, gens)
+        assert f_useful == sum(gens), (f_useful, sum(gens))
+        f_tps = f_useful / f_wall
+        f50, f95 = np.percentile(np.asarray(f_steps) * 1e6, [50, 95])
+        emit("serve_paged_fused", f_wall / max(f_useful, 1) * 1e6,
+             f"{f_tps:.1f} tok/s p50={f50:.0f}us p95={f95:.0f}us "
+             f"useful={f_useful} page={fused.page_size} "
+             f"vs-unfused={f_tps / max(p_tps, 1e-9):.2f}x",
+             tok_s=round(f_tps, 2), p50_us=round(f50, 1),
+             p95_us=round(f95, 1), useful_tokens=int(f_useful),
+             page_size=int(fused.page_size))
+
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,9 @@ from repro.core.optimizer import (OptResult, make_objective, optimize,
                                   optimize_beam, optimize_exhaustive)
 from repro.core.multicore import (MulticoreReport, best_scheme,
                                   evaluate_multicore)
+from repro.core.fusion import (Epilogue, FusedProblem, FusedTraffic,
+                               FusionResult, fused_energy_pj,
+                               fused_multicore_dram_bytes, optimize_fused)
 from repro.core.gemm_lowering import (direct_blocking_accesses,
                                       gemm_lowering_accesses,
                                       lowered_gemm_problem)
@@ -44,6 +47,8 @@ __all__ = [
     "OptResult", "make_objective", "optimize", "optimize_beam",
     "optimize_exhaustive",
     "MulticoreReport", "best_scheme", "evaluate_multicore",
+    "Epilogue", "FusedProblem", "FusedTraffic", "FusionResult",
+    "fused_energy_pj", "fused_multicore_dram_bytes", "optimize_fused",
     "direct_blocking_accesses", "gemm_lowering_accesses",
     "lowered_gemm_problem",
     "TPU_V5E", "TpuTarget", "conv_tile_candidates", "conv_tiles",

@@ -253,6 +253,166 @@ def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
       q, k_pages, v_pages, ks, vs)
 
 
+def oproj_vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
+                              d_model: int,
+                              bytes_per_elem: int = 2) -> int:
+    """VMEM footprint of one grid step of :func:`flash_decode_oproj`:
+    the base decode footprint plus the streamed per-head wo slab
+    (G*D x E) and the fp32 (1, E) output accumulator that stays
+    resident across the head loop.  Single source of truth for the
+    ``"flash_decode_oproj"`` schedule-candidate filter."""
+    base = vmem_bytes_required(block_kv, groups, head_dim, bytes_per_elem)
+    wo_slab = 2 * groups * head_dim * d_model * bytes_per_elem
+    out_acc = d_model * 4 + d_model * bytes_per_elem
+    return base + wo_slab + out_acc
+
+
+def oproj_hbm_bytes(batch: int, hkv: int, groups: int, head_dim: int,
+                    d_model: int, seq: int, block_kv: int,
+                    bytes_per_elem: int = 2) -> int:
+    """Exact HBM traffic of one :func:`flash_decode_oproj` call (the
+    grid's actual block transfers).  The unfused baseline additionally
+    writes the (B, Hq, D) attention output and reads it back for the
+    projection GEMM — that intermediate never exists here."""
+    nb = -(-seq // block_kv)
+    q_bytes = batch * hkv * groups * head_dim * bytes_per_elem
+    kv = 2 * batch * hkv * nb * block_kv * head_dim * bytes_per_elem
+    wo = batch * hkv * groups * head_dim * d_model * bytes_per_elem
+    out = batch * d_model * bytes_per_elem
+    return q_bytes + kv + wo + out
+
+
+def _decode_oproj_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, wo_ref,
+                         o_ref, m_ref, l_ref, acc_ref, oacc_ref, *,
+                         scale: float, window: int | None,
+                         logit_cap: float | None, block_kv: int,
+                         n_blocks: int, n_heads: int):
+    """Flash-decode with the output projection's row tile fused in.
+
+    Grid is (B, Hkv, n_blocks) with the KV block minor-most, exactly as
+    :func:`flash_decode` — but the per-head attention output (G, D) is
+    never written to HBM: at the last KV block of each head it is
+    multiplied into that head's wo row slab and accumulated into the
+    (1, E) output block, which ignores the head grid dim and therefore
+    stays VMEM-resident across the whole head loop (the paper's OB rule
+    applied to the *consumer* nest's reduction over heads).
+    """
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+    _decode_init(i, m_ref, l_ref, acc_ref)
+
+    @pl.when((h == 0) & (i == 0))
+    def _init_out():
+        oacc_ref[...] = jnp.zeros_like(oacc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    mask = _block_mask(len_ref, b, i, block_kv, window)
+    _softmax_update(s, v, mask, m_ref, l_ref, acc_ref)
+
+    @pl.when(i == n_blocks - 1)
+    def _project():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        attn = (acc_ref[...] / safe_l)                   # (G, D) fp32
+        wo = wo_ref[0].astype(jnp.float32)               # (G*D, E)
+        oacc_ref[...] += jnp.dot(attn.reshape(1, -1), wo,
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when((h == n_heads - 1) & (i == n_blocks - 1))
+    def _done():
+        o_ref[...] = oacc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "logit_cap",
+                                             "interpret"))
+def flash_decode_oproj(q: jax.Array, k_pages: jax.Array,
+                       v_pages: jax.Array, block_tables: jax.Array,
+                       lengths: jax.Array, wo: jax.Array, *,
+                       window: int | None = None,
+                       logit_cap: float | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Paged single-token attention fused with the output projection.
+
+    Same contract as :func:`flash_decode` plus ``wo``: the attention
+    output projection reshaped per kv head, ``(Hkv, G*D, E)`` (rows of
+    the dense ``(Hq*D, E)`` weight grouped by the kv head that produces
+    them).  Returns ``(B, E)`` — the per-head (G, D) attention outputs
+    are reduced into the projection inside VMEM and never round-trip
+    through HBM.  Schedule key: ``"flash_decode_oproj"`` (the KV block
+    is still the tunable, and still the paged cache's page size).
+
+    Traffic caveat (docs/fusion.md, "when fusion loses"): the output
+    block is resident across the head loop of ONE batch row, so the wo
+    slabs are refetched per row — ``B * Hq * D * E`` weight bytes vs
+    the unfused GEMM's single pass.  Per request (B=1, the paged
+    engine's per-slot view) fusion strictly saves the attention
+    output's round-trip; at large decode batches the wo refetch can
+    outweigh it, which is exactly the arithmetic
+    ``oproj_hbm_bytes`` exposes — leave ``fuse`` off there.
+    """
+    b, hkv, g, d = q.shape
+    _, page, _, _ = k_pages.shape
+    e = wo.shape[-1]
+    assert wo.shape == (hkv, g * d, e), (wo.shape, (hkv, g * d, e))
+    n_blocks = block_tables.shape[1]
+    scale = d ** -0.5
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
+            pl.BlockSpec((1, g * d, e), lambda bi, h, i, bt, ln: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda bi, h, i, bt, ln: (bi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max m
+            pltpu.VMEM((g, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((g, d), jnp.float32),     # attention acc (OB)
+            pltpu.VMEM((1, e), jnp.float32),     # projected-output acc
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_oproj_kernel, scale=scale, window=window,
+                          logit_cap=logit_cap, block_kv=page,
+                          n_blocks=n_blocks, n_heads=hkv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, e), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages, wo)
+
+
+def paged_attention_oproj_ref(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array,
+                              block_tables: jax.Array,
+                              lengths: jax.Array, wo: jax.Array, *,
+                              window: int | None = None,
+                              logit_cap: float | None = None,
+                              ) -> jax.Array:
+    """jnp oracle (and the unfused chain): paged attention, then the
+    dense projection over the flattened heads.  wo: (Hkv, G*D, E)."""
+    b, hkv, g, d = q.shape
+    e = wo.shape[-1]
+    attn = paged_attention_ref(q, k_pages, v_pages, block_tables,
+                               lengths, window=window,
+                               logit_cap=logit_cap)    # (B, Hkv, G, D)
+    flat = attn.reshape(b, hkv * g * d).astype(jnp.float32)
+    w2 = wo.reshape(hkv * g * d, e).astype(jnp.float32)
+    return jnp.dot(flat, w2,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+
+
 def paged_attention_fp8_ref(q: jax.Array, k_pages: jax.Array,
                             v_pages: jax.Array, k_scale: jax.Array,
                             v_scale: jax.Array, block_tables: jax.Array,

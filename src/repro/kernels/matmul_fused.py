@@ -1,0 +1,212 @@
+"""Epilogue-fused blocked GEMM Pallas kernel (wide and int8-weight).
+
+``Y = act(A @ W + bias) * mul + residual`` in ONE kernel: the output
+tile never leaves VMEM between the reduction and its pointwise tail, so
+the activation round-trip and the residual add's extra pass — whole
+(M, N) tensors of HBM traffic in the per-op chain — disappear.  This is
+the kernel realization of ``core.fusion``'s always-fusible epilogue
+edges; the tile schedule comes from the ``"matmul_fused"`` tune key
+(``"matmul_w8"`` when the weight is int8 — the dtype-aware search from
+PR 4 composes unchanged, the epilogue only adds streamed tiles).
+
+Grid order matches :mod:`repro.kernels.matmul_blocked`: (m, n, k) with
+k minor-most; the fp32 accumulator is the paper's OB held across the
+whole reduction, and the epilogue runs exactly once per output block at
+the last k step.  Epilogue operand tiles (bias row, mul/residual
+blocks) are indexed (i, j) only, so Pallas fetches each exactly once
+per output block — :func:`hbm_bytes` counts that traffic exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def vmem_bytes_required(bm: int, bk: int, bn: int,
+                        bytes_per_elem: int = 2,
+                        w_bytes: int | None = None,
+                        has_bias: bool = True,
+                        n_extra: int = 2) -> int:
+    """VMEM footprint of one grid step of :func:`matmul_fused`.
+
+    The A and W tiles are streamed (double-buffered) at their own
+    widths; the output block + fp32 accumulator stay resident; each
+    epilogue operand adds a double-buffered streamed tile (bias: one
+    (1, bn) fp32 row; mul/residual: one (bm, bn) block each).  The
+    schedule filter sizes for the worst case (bias + mul + residual) so
+    one cached schedule serves every epilogue combination.
+    """
+    wb = w_bytes or bytes_per_elem
+    streamed = 2 * (bm * bk * bytes_per_elem + bk * bn * wb)
+    resident = bm * bn * (bytes_per_elem + 4)
+    epilogue = (2 * bn * 4 if has_bias else 0) + \
+        n_extra * 2 * bm * bn * bytes_per_elem
+    scale_row = 2 * bn * 4 if w_bytes is not None else 0
+    return streamed + resident + epilogue + scale_row
+
+
+def hbm_bytes(M: int, N: int, K: int, bm: int, bk: int, bn: int,
+              bytes_per_elem: int = 2, w_bytes: int | None = None,
+              has_bias: bool = False, has_mul: bool = False,
+              has_residual: bool = False) -> int:
+    """Exact HBM traffic of one :func:`matmul_fused` call.
+
+    This is not a model estimate: it counts the blocks the grid
+    actually transfers (Pallas skips a DMA only when consecutive grid
+    steps map to the same block — with k minor-most that elides the
+    output across the reduction and nothing else).  The benchmark's
+    "measured DRAM bytes" column is this number for the executed
+    schedule; ``tune.predicted_dram_bytes`` is the model's.
+    """
+    gm, gn = M // bm, N // bn
+    wb = w_bytes or bytes_per_elem
+    total = M * K * bytes_per_elem * gn          # A refetched per j
+    total += K * N * wb * gm                     # W refetched per i
+    total += M * N * bytes_per_elem              # output written once
+    if w_bytes is not None:
+        total += N * 4 * gm                      # scale row per i-block
+    if has_bias:
+        total += N * 4 * gm
+    if has_mul:
+        total += M * N * bytes_per_elem
+    if has_residual:
+        total += M * N * bytes_per_elem
+    return total
+
+
+def _fused_kernel(*refs, n_k: int, act: str, has_scale: bool,
+                  has_bias: bool, has_mul: bool, has_res: bool):
+    it = iter(refs)
+    a_ref, w_ref = next(it), next(it)
+    s_ref = next(it) if has_scale else None
+    bias_ref = next(it) if has_bias else None
+    mul_ref = next(it) if has_mul else None
+    res_ref = next(it) if has_res else None
+    o_ref, acc_ref = next(it), next(it)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32) if has_scale else a_ref[...]
+    w = w_ref[...].astype(jnp.float32) if has_scale else w_ref[...]
+    acc_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        y = acc_ref[...]
+        if has_scale:           # w8: per-output-channel dequant scale
+            y = y * s_ref[...]
+        if has_bias:
+            y = y + bias_ref[...]
+        y = ACTIVATIONS[act](y)
+        if has_mul:
+            y = y * mul_ref[...].astype(jnp.float32)
+        if has_res:
+            y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bk", "bn",
+                                             "interpret"))
+def matmul_fused(a: jax.Array, w: jax.Array,
+                 scale: jax.Array | None = None,
+                 bias: jax.Array | None = None,
+                 mul: jax.Array | None = None,
+                 residual: jax.Array | None = None, *,
+                 act: str = "none",
+                 bm: int, bk: int, bn: int,
+                 interpret: bool = False) -> jax.Array:
+    """``act(A[M,K] @ W[K,N] (*scale) + bias) * mul + residual``.
+
+    ``w`` int8 with fp32 ``scale`` (per-channel ``(N,)`` or scalar) is
+    the quantized path — in-kernel dequant exactly as
+    :mod:`repro.kernels.matmul_q`.  ``bias``: (N,); ``mul`` (the SwiGLU
+    gating operand) and ``residual``: (M, N).  Dims must divide the
+    tiles; ragged shapes take :func:`matmul_fused_ref` via
+    ``kernels.ops``.
+    """
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, (a.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{n})"
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    grid = (m // bm, n // bn, k // bk)
+
+    inputs: list[jax.Array] = [a, w]
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))]
+    row_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    blk_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    if scale is not None:
+        inputs.append(jnp.broadcast_to(
+            jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n)))
+        in_specs.append(row_spec)
+    if bias is not None:
+        inputs.append(jnp.asarray(bias, jnp.float32).reshape(1, n))
+        in_specs.append(row_spec)
+    if mul is not None:
+        assert mul.shape == (m, n), mul.shape
+        inputs.append(mul)
+        in_specs.append(blk_spec)
+    if residual is not None:
+        assert residual.shape == (m, n), residual.shape
+        inputs.append(residual)
+        in_specs.append(blk_spec)
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, n_k=grid[2], act=act,
+                          has_scale=scale is not None,
+                          has_bias=bias is not None,
+                          has_mul=mul is not None,
+                          has_res=residual is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*inputs)
+
+
+def matmul_fused_ref(a: jax.Array, w: jax.Array,
+                     scale: jax.Array | None = None,
+                     bias: jax.Array | None = None,
+                     mul: jax.Array | None = None,
+                     residual: jax.Array | None = None, *,
+                     act: str = "none") -> jax.Array:
+    """jnp oracle with bit-comparable math: fp32 accumulate, scale then
+    bias then activation then mul then residual, cast once at the end.
+    The correctness oracle in tests, the ragged-shape fallback in
+    ``kernels.ops``, and the off-TPU fast path (XLA fuses the epilogue
+    itself there)."""
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    if scale is not None:
+        y = jnp.dot(a.astype(jnp.float32), w.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        y = y * jnp.asarray(scale, jnp.float32).reshape(1, -1)
+    else:
+        y = jnp.dot(a, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    y = ACTIVATIONS[act](y)
+    if mul is not None:
+        y = y * mul.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(a.dtype)

@@ -131,6 +131,217 @@ def matmul_w8(a: jax.Array, w_q: jax.Array, scale: jax.Array,
     return _kernel(a, w_q, scale, bm=bm, bk=bk, bn=bn, interpret=interpret)
 
 
+# ----------------------------- fused ops -----------------------------------
+
+_FUSED_OPS: contextvars.ContextVar[bool | None] = \
+    contextvars.ContextVar("repro_fused_ops", default=None)
+
+
+def fused_ops_enabled() -> bool:
+    v = _FUSED_OPS.get()
+    if v is None:
+        return os.environ.get("REPRO_FUSED_OPS") == "1"
+    return v
+
+
+@contextlib.contextmanager
+def fused_ops(enable: bool = True):
+    """Route model hot paths through the cross-op fused kernels while
+    tracing under this context (docs/fusion.md): the MLP block through
+    the epilogue-fused GEMM (:func:`matmul_fused`), the attention
+    front-end through the weight-stationary QKV pass
+    (:func:`qkv_fused`), and — when the serving engine asks — paged
+    decode through the oproj-fused flash decode.  The serving engines
+    set this from their ``fuse`` config flag at trace time."""
+    tok = _FUSED_OPS.set(bool(enable))
+    try:
+        yield
+    finally:
+        _FUSED_OPS.reset(tok)
+
+
+def _kernels_on(use_kernel: bool | None) -> bool:
+    """Fused kernels run on TPU by default; off-TPU the jnp oracle IS
+    the fused semantics (XLA fuses the epilogue) without paying the
+    Pallas interpreter — same policy as ``paged_attention``."""
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_kernel
+
+
+def _attn_kernels_on(use_kernel: bool | None) -> bool:
+    """Attention-kernel gating: :func:`_kernels_on` plus the
+    ``REPRO_REF_ATTENTION`` roofline override, which forces the
+    reference path even when a caller asked for the kernel.  The single
+    policy shared by ``paged_attention`` and ``paged_attention_oproj``.
+    """
+    if os.environ.get("REPRO_REF_ATTENTION"):
+        return False
+    return _kernels_on(use_kernel)
+
+
+def matmul_fused(a: jax.Array, w, *, bias: jax.Array | None = None,
+                 act: str = "none", mul: jax.Array | None = None,
+                 residual: jax.Array | None = None,
+                 tiles: tuple[int, int, int] | None = None,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None) -> jax.Array:
+    """``act(a @ w + bias) * mul + residual`` with the epilogue fused
+    into the GEMM — the output tile never round-trips through HBM
+    between the reduction and its pointwise tail.
+
+    ``a`` may have any leading shape; ``mul``/``residual`` must match
+    the output shape.  ``w`` may be a
+    :class:`repro.quant.QuantizedTensor` (int8): the w8 epilogue-fused
+    kernel runs under the PR 4 ``"matmul_w8"`` schedule key, so
+    quantization and fusion compose.  Inference-path op (no VJP);
+    ragged shapes take the jnp oracle.
+    """
+    from repro.kernels.matmul_fused import (matmul_fused as _kernel,
+                                            matmul_fused_ref)
+    from repro.quant.quantize import QuantizedTensor
+    scale = None
+    if isinstance(w, QuantizedTensor):
+        if w.q.ndim != 2 or w.q.dtype != jnp.int8:
+            w2 = w.dequant(jnp.float32).astype(a.dtype)
+            return matmul_fused(a, w2, bias=bias, act=act, mul=mul,
+                                residual=residual, tiles=tiles,
+                                use_kernel=use_kernel,
+                                interpret=interpret)
+        scale = w.scale.reshape(-1)
+        w = w.q
+    lead = a.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    a2 = a.reshape(m, a.shape[-1])
+    n = w.shape[-1]
+    mul2 = mul.reshape(m, n) if mul is not None else None
+    res2 = residual.reshape(m, n) if residual is not None else None
+    k = a2.shape[-1]
+    if _kernels_on(use_kernel):
+        op = "matmul_w8" if scale is not None else "matmul_fused"
+        bm, bk, bn = tiles or best_schedule(op, (m, n, k),
+                                            a.dtype.name).tiles
+        fits = True
+        if tiles is None and scale is not None:
+            # a cached "matmul_w8" schedule was validated against the
+            # UNFUSED kernel's footprint (tune.fits_vmem); re-check it
+            # against the fused footprint — the streamed epilogue tiles
+            # it never accounted for — before running it
+            from repro.kernels.matmul_fused import vmem_bytes_required
+            from repro.tune import vmem_budget
+            fits = vmem_bytes_required(bm, bk, bn, a.dtype.itemsize,
+                                       w_bytes=1) <= vmem_budget()
+        if fits and m % bm == 0 and k % bk == 0 and n % bn == 0:
+            interpret = default_interpret() if interpret is None \
+                else interpret
+            out = _kernel(a2, w, scale=scale, bias=bias, mul=mul2,
+                          residual=res2, act=act, bm=bm, bk=bk, bn=bn,
+                          interpret=interpret)
+            return out.reshape(*lead, n)
+        if scale is not None and not fits:
+            # keep the 1-byte weight stream: the unfused w8 kernel under
+            # its own validated schedule, epilogue composed outside
+            from repro.kernels.matmul_fused import ACTIVATIONS
+            y = matmul_w8(a2, w, scale,
+                          interpret=interpret).astype(jnp.float32)
+            if bias is not None:
+                y = y + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+            y = ACTIVATIONS[act](y)
+            if mul2 is not None:
+                y = y * mul2.astype(jnp.float32)
+            if res2 is not None:
+                y = y + res2.astype(jnp.float32)
+            return y.astype(a.dtype).reshape(*lead, n)
+    out = matmul_fused_ref(a2, w, scale=scale, bias=bias, mul=mul2,
+                           residual=res2, act=act)
+    return out.reshape(*lead, n)
+
+
+def qkv_fused(x: jax.Array, wq, wk, wv, *,
+              tiles: tuple[int, int, int] | None = None,
+              use_kernel: bool | None = None,
+              interpret: bool | None = None):
+    """The attention front-end's three projections in one
+    weight-stationary pass: the activation streams from HBM once
+    instead of three times.  Quantized (``QuantizedTensor``) weights
+    fall back to three :func:`linear` calls, preserving the w8
+    semantics exactly.  Returns ``(q, k, v)`` with the input's leading
+    shape."""
+    from repro.kernels.qkv_fused import qkv_fused as _kernel
+    from repro.quant.quantize import QuantizedTensor
+    if any(isinstance(w, QuantizedTensor) for w in (wq, wk, wv)):
+        return (linear(x, wq, interpret), linear(x, wk, interpret),
+                linear(x, wv, interpret))
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, x.shape[-1])
+    k = x2.shape[-1]
+    nq, nkv = wq.shape[-1], wk.shape[-1]
+    if _kernels_on(use_kernel) and nq % nkv == 0:
+        g = nq // nkv
+        bm, bk, bn = tiles or best_schedule("qkv_fused", (m, nkv, k, g),
+                                            x.dtype.name).tiles
+        if m % bm == 0 and k % bk == 0 and nkv % bn == 0:
+            interpret = default_interpret() if interpret is None \
+                else interpret
+            q2, k2, v2 = _kernel(x2, wq, wk, wv, bm=bm, bk=bk, bn=bn,
+                                 interpret=interpret)
+            return (q2.reshape(*lead, nq), k2.reshape(*lead, nkv),
+                    v2.reshape(*lead, nkv))
+    from repro.kernels.qkv_fused import qkv_fused_ref
+    q2, k2, v2 = qkv_fused_ref(x2, wq, wk, wv)
+    return (q2.reshape(*lead, nq), k2.reshape(*lead, nkv),
+            v2.reshape(*lead, nkv))
+
+
+def paged_attention_oproj(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_tables: jax.Array,
+                          lengths: jax.Array, wo, *,
+                          window: int | None = None,
+                          logit_cap: float | None = None,
+                          use_kernel: bool | None = None,
+                          interpret: bool | None = None) -> jax.Array:
+    """Paged decode attention with the output projection fused in.
+
+    Same contract as :func:`paged_attention` plus ``wo`` — the dense
+    ``(Hq*D, E)`` output-projection weight — and returns ``(B, E)``:
+    the per-head attention outputs are reduced into the projection in
+    VMEM and never exist in HBM.  An fp8 page pool or a quantized
+    ``wo`` falls back to the unfused pair (``paged_attention`` +
+    :func:`linear`), so ``--fuse`` composes with every ``--quantize``
+    mode.
+    """
+    from repro.kernels.flash_decode import (flash_decode_oproj,
+                                            paged_attention_oproj_ref)
+    from repro.quant.quantize import QuantizedTensor
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    fp8 = jnp.dtype(k_pages.dtype).itemsize == 1
+    if fp8 or isinstance(wo, QuantizedTensor):
+        out = paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                              window=window, logit_cap=logit_cap,
+                              use_kernel=use_kernel, interpret=interpret)
+        return linear(out.reshape(b, hq * d), wo, interpret)
+    e = wo.shape[-1]
+    qg = q.reshape(b, hkv, g, d)
+    wo3 = wo.reshape(hkv, g * d, e)
+    if _attn_kernels_on(use_kernel):
+        interpret = default_interpret() if interpret is None else interpret
+        return flash_decode_oproj(qg, k_pages, v_pages, block_tables,
+                                  lengths, wo3, window=window,
+                                  logit_cap=logit_cap,
+                                  interpret=interpret)
+    return paged_attention_oproj_ref(qg, k_pages, v_pages, block_tables,
+                                     lengths, wo3, window=window,
+                                     logit_cap=logit_cap)
+
+
 # ------------------------------- linear ------------------------------------
 
 _BLOCKED_LINEAR: contextvars.ContextVar[bool | None] = \
@@ -337,11 +548,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         # unit scales = pure-cast semantics, shared by kernel and oracle
         ks = jnp.ones(hkv, jnp.float32) if k_scale is None else k_scale
         vs = jnp.ones(hkv, jnp.float32) if v_scale is None else v_scale
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if os.environ.get("REPRO_REF_ATTENTION"):
-        use_kernel = False
-    if use_kernel:
+    if _attn_kernels_on(use_kernel):
         interpret = default_interpret() if interpret is None else interpret
         if fp8:
             out = flash_decode_fp8(qg, k_pages, v_pages, ks, vs,

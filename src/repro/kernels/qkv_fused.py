@@ -1,0 +1,137 @@
+"""Fused QKV projection Pallas kernel: one activation pass, three heads.
+
+The unfused attention front-end runs three GEMMs — ``x @ wq``,
+``x @ wk``, ``x @ wv`` — each streaming the SAME activation matrix from
+HBM.  This kernel shares one A tile per grid step across all three
+weight streams, so the activation crosses the HBM boundary once instead
+of three times (the ``core.fusion`` input-sharing edge: the three nests
+share their input operand, and blocking them jointly makes two of the
+three fetches free).
+
+GQA layout: ``wq`` is (K, G*Nkv) and ``wk``/``wv`` are (K, Nkv) with
+G = Hq/Hkv; the grid blocks the per-projection width Nkv, and each
+grid step produces a (bm, G*bn) q block next to (bm, bn) k/v blocks —
+so one (bm, bk) A tile feeds (G+2)*bn output columns.  Tiles come from
+the ``"qkv_fused"`` tune key (dims ``(M, Nkv, K, G)``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def vmem_bytes_required(bm: int, bk: int, bn: int, groups: int,
+                        bytes_per_elem: int = 2) -> int:
+    """VMEM footprint of one grid step of :func:`qkv_fused`: one
+    streamed A tile, (G+2)*bn streamed weight columns, and (G+2)*bn
+    resident output columns with fp32 accumulators.  Single source of
+    truth for the ``"qkv_fused"`` schedule-candidate filter."""
+    cols = (groups + 2) * bn
+    streamed = 2 * (bm * bk + bk * cols) * bytes_per_elem
+    resident = bm * cols * (bytes_per_elem + 4)
+    return streamed + resident
+
+
+def hbm_bytes(M: int, Nkv: int, K: int, groups: int,
+              bm: int, bk: int, bn: int,
+              bytes_per_elem: int = 2) -> int:
+    """Exact HBM traffic of one :func:`qkv_fused` call (the grid's
+    actual block transfers; see ``matmul_fused.hbm_bytes``).  The
+    unfused baseline is three GEMM calls, each re-streaming A."""
+    gn = Nkv // bn
+    cols = (groups + 2) * Nkv
+    total = M * K * bytes_per_elem * gn          # A: ONCE per j sweep
+    total += K * cols * bytes_per_elem * (M // bm)   # all three weights
+    total += M * cols * bytes_per_elem           # q, k, v written once
+    return total
+
+
+def _qkv_kernel(x_ref, wq_ref, wk_ref, wv_ref, q_ref, k_ref, v_ref,
+                accq_ref, acck_ref, accv_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accq_ref[...] = jnp.zeros_like(accq_ref)
+        acck_ref[...] = jnp.zeros_like(acck_ref)
+        accv_ref[...] = jnp.zeros_like(accv_ref)
+
+    x = x_ref[...]                               # ONE tile, three uses
+    accq_ref[...] += jnp.dot(x, wq_ref[...],
+                             preferred_element_type=jnp.float32)
+    acck_ref[...] += jnp.dot(x, wk_ref[...],
+                             preferred_element_type=jnp.float32)
+    accv_ref[...] += jnp.dot(x, wv_ref[...],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        q_ref[...] = accq_ref[...].astype(q_ref.dtype)
+        k_ref[...] = acck_ref[...].astype(k_ref.dtype)
+        v_ref[...] = accv_ref[...].astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn",
+                                             "interpret"))
+def qkv_fused(x: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
+              *, bm: int, bk: int, bn: int,
+              interpret: bool = False) -> tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """(x@wq, x@wk, x@wv) in one weight-stationary pass.
+
+    x: (M, K); wq: (K, G*Nkv); wk, wv: (K, Nkv).  ``bn`` blocks the
+    per-projection width Nkv (the q block is G*bn wide).  Dims must
+    divide; ragged shapes take the three-GEMM fallback in
+    ``kernels.ops``.
+    """
+    m, k = x.shape
+    _, nq = wq.shape
+    _, nkv = wk.shape
+    assert wv.shape == wk.shape, (wv.shape, wk.shape)
+    assert wq.shape[0] == k and wk.shape[0] == k, (wq.shape, wk.shape)
+    assert nq % nkv == 0, (nq, nkv)
+    g = nq // nkv
+    assert m % bm == 0 and k % bk == 0 and nkv % bn == 0, \
+        f"tiles ({bm},{bk},{bn}) must divide ({m},{k},{nkv})"
+    grid = (m // bm, nkv // bn, k // bk)
+    q, kk, v = pl.pallas_call(
+        functools.partial(_qkv_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, r: (i, r)),
+            pl.BlockSpec((bk, g * bn), lambda i, j, r: (r, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, r: (r, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, r: (r, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, g * bn), lambda i, j, r: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nq), x.dtype),
+            jax.ShapeDtypeStruct((m, nkv), x.dtype),
+            jax.ShapeDtypeStruct((m, nkv), x.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, g * bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, wq, wk, wv)
+    return q, kk, v
+
+
+def qkv_fused_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                  wv: jax.Array) -> tuple[jax.Array, jax.Array,
+                                          jax.Array]:
+    """jnp oracle (and the unfused chain it replaces): three dots with
+    fp32 accumulation, bit-comparable to the kernel."""
+    def one(w):
+        return jnp.dot(x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return one(wq), one(wk), one(wv)

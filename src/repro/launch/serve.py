@@ -55,6 +55,11 @@ def main() -> None:
                     help="w8: int8 projection weights (matmul_w8 kernel); "
                          "fp8kv: fp8 KV page pool (fp8 flash-decode + "
                          "fp8-aware page size); w8fp8: both")
+    ap.add_argument("--fuse", action="store_true",
+                    help="cross-op fused kernels on the hot path: "
+                         "epilogue-fused MLP GEMMs, one-pass QKV, and "
+                         "(paged) oproj-fused flash decode; composes "
+                         "with --quantize (docs/fusion.md)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -75,7 +80,7 @@ def main() -> None:
         engine = PagedEngine(cfg, params, PagedServeConfig(
             max_seq=args.max_seq, max_batch=args.batch,
             page_size=args.page_size or None,
-            temperature=args.temperature))
+            temperature=args.temperature, fuse=args.fuse))
         n_req = args.requests or args.batch
         lo = max(1, args.prompt_len // 2) if args.mixed_lens \
             else args.prompt_len
@@ -87,14 +92,16 @@ def main() -> None:
         dt = time.perf_counter() - t0
         tps = n_req * args.gen / dt
         print(f"paged engine: page={engine.page_size} "
-              f"slots={args.batch} requests={n_req}")
+              f"slots={args.batch} requests={n_req}"
+              + (" fused" if args.fuse else ""))
         print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
         print("sample:", out[0, :16].tolist())
         return
 
     engine = DecodeEngine(cfg, params,
                           ServeConfig(max_seq=args.max_seq,
-                                      temperature=args.temperature))
+                                      temperature=args.temperature,
+                                      fuse=args.fuse))
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
                            dtype=np.int32)
     kwargs = {}

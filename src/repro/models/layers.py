@@ -108,9 +108,18 @@ def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ops.linear(x, params["wq"]).reshape(b, s, hq, hd)
-    k = ops.linear(x, params["wk"]).reshape(b, s, hkv, hd)
-    v = ops.linear(x, params["wv"]).reshape(b, s, hkv, hd)
+    if ops.fused_ops_enabled():
+        # one weight-stationary pass: x streams from HBM once for all
+        # three projections (docs/fusion.md)
+        q, k, v = ops.qkv_fused(x, params["wq"], params["wk"],
+                                params["wv"])
+        q = q.reshape(b, s, hq, hd)
+        k = k.reshape(b, s, hkv, hd)
+        v = v.reshape(b, s, hkv, hd)
+    else:
+        q = ops.linear(x, params["wq"]).reshape(b, s, hq, hd)
+        k = ops.linear(x, params["wk"]).reshape(b, s, hkv, hd)
+        v = ops.linear(x, params["wv"]).reshape(b, s, hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     out = ops.attention(q, k, v, causal=causal, window=window,
@@ -146,12 +155,20 @@ def qkv_decode_proj(cfg: ModelConfig, params: dict, x: jax.Array,
     Returns q (B, Hq, D), k/v (B, Hkv, D)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    # ops.linear (not a bare @): quantized params carry QuantizedTensor
-    # projection weights, which linear dispatches to the w8 kernel /
-    # dequant oracle (docs/quantization.md)
-    q = ops.linear(x, params["wq"]).reshape(b, 1, hq, hd)
-    k = ops.linear(x, params["wk"]).reshape(b, 1, hkv, hd)
-    v = ops.linear(x, params["wv"]).reshape(b, 1, hkv, hd)
+    if ops.fused_ops_enabled():
+        # fused path falls back to the three ops.linear calls itself
+        # when the weights are QuantizedTensors (w8 semantics intact)
+        q, k, v = ops.qkv_fused(x, params["wq"], params["wk"],
+                                params["wv"])
+        q, k, v = (q.reshape(b, 1, hq, hd), k.reshape(b, 1, hkv, hd),
+                   v.reshape(b, 1, hkv, hd))
+    else:
+        # ops.linear (not a bare @): quantized params carry
+        # QuantizedTensor projection weights, which linear dispatches to
+        # the w8 kernel / dequant oracle (docs/quantization.md)
+        q = ops.linear(x, params["wq"]).reshape(b, 1, hq, hd)
+        k = ops.linear(x, params["wk"]).reshape(b, 1, hkv, hd)
+        v = ops.linear(x, params["wv"]).reshape(b, 1, hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     return q[:, 0], k[:, 0], v[:, 0]
@@ -231,17 +248,37 @@ def mlp_defs(cfg: ModelConfig, model_ax: int) -> dict:
     return defs
 
 
-def mlp_apply(params: dict, x: jax.Array) -> jax.Array:
-    # ops.linear is a plain matmul unless blocked linears are enabled
-    # (training with tc.blocked_linear / REPRO_BLOCKED_LINEAR), in which
-    # case fwd AND bwd run the tuned Pallas GEMM kernels.
+def mlp_apply(params: dict, x: jax.Array,
+              residual: jax.Array | None = None) -> jax.Array:
+    """The MLP block.  ``residual`` (when given) is added to the output
+    — callers pass the skip connection so the fused path can absorb the
+    add into the down-projection's epilogue.
+
+    With fused ops enabled (``ops.fused_ops`` — the serving engines'
+    ``fuse`` flag), the whole chain runs as epilogue-fused GEMMs under
+    the ``"matmul_fused"`` schedule key (``"matmul_w8"`` for quantized
+    weights): activation, SwiGLU gating multiply and residual add all
+    happen on the VMEM-resident output tile, eliminating their HBM
+    round-trips (docs/fusion.md).  Otherwise the per-op chain below
+    runs — ops.linear is a plain matmul unless blocked linears are
+    enabled (training with tc.blocked_linear / REPRO_BLOCKED_LINEAR),
+    in which case fwd AND bwd run the tuned Pallas GEMM kernels.
+    """
+    if ops.fused_ops_enabled():
+        if "w_gate" in params:  # SwiGLU
+            g = ops.matmul_fused(x, params["w_gate"], act="silu")
+            u = ops.matmul_fused(x, params["w_up"], mul=g)
+        else:  # plain GELU MLP
+            u = ops.matmul_fused(x, params["w_up"], act="gelu")
+        return ops.matmul_fused(u, params["w_down"], residual=residual)
     u = ops.linear(x, params["w_up"]).astype(jnp.float32)
     if "w_gate" in params:  # SwiGLU
         g = jax.nn.silu(ops.linear(x, params["w_gate"]).astype(jnp.float32))
         u = g * u
     else:  # plain GELU MLP (granite-34b, seamless encoder/decoder)
         u = jax.nn.gelu(u)
-    return ops.linear(u.astype(x.dtype), params["w_down"])
+    out = ops.linear(u.astype(x.dtype), params["w_down"])
+    return out if residual is None else residual + out
 
 
 # ============================ MoE (top-k) ==================================

@@ -135,7 +135,7 @@ def _block_apply(cfg: ModelConfig, p: dict, h: jax.Array, mixer: str,
             h = h + out
             aux = aux + a
         else:
-            h = h + L.mlp_apply(p["ffn"], hf)
+            h = L.mlp_apply(p["ffn"], hf, residual=h)
     return h, aux
 
 
@@ -163,7 +163,7 @@ def _encoder_apply(cfg: ModelConfig, params: dict, embeds: jax.Array):
         h = h + L.attention_apply(cfg, p["mixer"], hn, positions,
                                   causal=False)
         hf = L.rmsnorm(p["norm2"], h)
-        h = h + L.mlp_apply(p["ffn"], hf)
+        h = L.mlp_apply(p["ffn"], hf, residual=h)
         return h, None
 
     h, _ = _scan(step, h, enc["layers"])
@@ -321,7 +321,7 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 out, _ = L.moe_apply(cfg, p["ffn"], hf)
                 h = h + out
             else:
-                h = h + L.mlp_apply(p["ffn"], hf)
+                h = L.mlp_apply(p["ffn"], hf, residual=h)
         return h, cache
 
     def scan_step(h, cycle_params):
@@ -455,7 +455,7 @@ def _block_decode(cfg: ModelConfig, p: dict, h: jax.Array, mixer: str,
             out, _ = L.moe_apply(cfg, p["ffn"], hf)
             h = h + out
         else:
-            h = h + L.mlp_apply(p["ffn"], hf)
+            h = L.mlp_apply(p["ffn"], hf, residual=h)
     return h, new_cache
 
 

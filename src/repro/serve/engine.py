@@ -17,13 +17,13 @@ an on-device output buffer read back only when a request finishes.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serve import kv_cache as KV
@@ -49,6 +49,7 @@ class ServeConfig:
     max_seq: int = 1024
     temperature: float = 0.0   # 0 -> greedy
     seed: int = 0
+    fuse: bool = False         # cross-op fused kernels (docs/fusion.md)
 
 
 class DecodeEngine:
@@ -57,9 +58,14 @@ class DecodeEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
         self.cfg, self.params, self.sc = cfg, params, sc
-        self._prefill = jax.jit(
-            functools.partial(T.prefill, cfg),
-            static_argnames=("max_seq",))
+
+        def prefill(*a, **kw):
+            # the fusion flag is read at TRACE time; each engine owns its
+            # jit wrappers, so the flag is pinned per instance
+            with ops.fused_ops(sc.fuse):
+                return T.prefill(cfg, *a, **kw)
+
+        self._prefill = jax.jit(prefill, static_argnames=("max_seq",))
         self._gen = jax.jit(self._gen_fn, static_argnames=("n_tokens",))
 
     def generate(self, prompts: np.ndarray, n_tokens: int,
@@ -94,8 +100,9 @@ class DecodeEngine:
                               jax.random.fold_in(rng, i))
             return (t, cache, pos + 1), t
 
-        (_, _, _), rest = jax.lax.scan(
-            body, (tok0, cache, pos), jnp.arange(1, n_tokens))
+        with ops.fused_ops(sc.fuse):
+            (_, _, _), rest = jax.lax.scan(
+                body, (tok0, cache, pos), jnp.arange(1, n_tokens))
         return jnp.concatenate([tok0[:, None], rest.T], axis=1)
 
 
@@ -110,6 +117,7 @@ class PagedServeConfig:
     n_pages: int | None = None     # None -> max_batch full sequences + 1
     temperature: float = 0.0
     seed: int = 0
+    fuse: bool = False             # cross-op fused kernels (docs/fusion.md)
     buckets: tuple[int, ...] | None = None   # prefill padding lengths
     decode_chunk: int = 8          # decode steps per scheduler visit
     use_kernel: bool | None = None  # paged attention: None -> TPU only
@@ -159,7 +167,7 @@ class PagedEngine:
         self.cfg, self.params, self.sc = cfg, params, sc
         has_attn = any(p in ("global", "local") for p in cfg.layer_pattern)
         self.page_size = sc.page_size or (
-            KV.choose_page_size(cfg, sc.max_seq) if has_attn
+            KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse) if has_attn
             else min(sc.max_seq, 128))   # attention-free: pages unused
         self.max_blocks = KV.num_blocks(sc.max_seq, self.page_size)
         n_pages = sc.n_pages or sc.max_batch * self.max_blocks + 1
@@ -283,9 +291,10 @@ class PagedEngine:
 
             def join(params, cache, prompt, true_len, slot, pages,
                      cur_tok, out_buf, key):
-                logits, dense = T.prefill(cfg, params, prompt,
-                                          max_seq=bucket, full_kv=True,
-                                          logits_at=true_len - 1)
+                with ops.fused_ops(sc.fuse):
+                    logits, dense = T.prefill(cfg, params, prompt,
+                                              max_seq=bucket, full_kv=True,
+                                              logits_at=true_len - 1)
                 cache = KV.write_prefill(cfg, cache, dense, slot, pages,
                                          self.page_size)
                 tok = sample_tokens(cfg, logits, sc.temperature, key)[0]
@@ -308,7 +317,8 @@ class PagedEngine:
         cfg = self.cfg
         attn = KV.make_paged_attn_step(cfg, block_tables, self.page_size,
                                        self.sc.use_kernel,
-                                       self.sc.interpret)
+                                       self.sc.interpret,
+                                       fused=self.sc.fuse)
         rows = jnp.arange(cur_tok.shape[0])
 
         def body(carry, i):
@@ -326,9 +336,10 @@ class PagedEngine:
             lengths = jnp.where(active, lengths + 1, lengths)
             return (tok, cache, lengths, out_idx, out_buf), None
 
-        (cur_tok, cache, _, _, out_buf), _ = jax.lax.scan(
-            body, (cur_tok, cache, lengths, out_idx, out_buf),
-            jnp.arange(chunk))
+        with ops.fused_ops(self.sc.fuse):
+            (cur_tok, cache, _, _, out_buf), _ = jax.lax.scan(
+                body, (cur_tok, cache, lengths, out_idx, out_buf),
+                jnp.arange(chunk))
         return cur_tok, cache, out_buf
 
     def _decode_once(self, running: list[Request]) -> None:

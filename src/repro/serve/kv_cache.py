@@ -43,7 +43,7 @@ SCRATCH_PAGE = 0
 
 
 def choose_page_size(cfg: ModelConfig, max_seq: int,
-                     cache=None) -> int:
+                     cache=None, fused: bool = False) -> int:
     """KV page size from the analytical model (op key ``"flash_decode"``).
 
     The spec's dims are (G, S, D): G query heads per KV head stream over
@@ -55,16 +55,25 @@ def choose_page_size(cfg: ModelConfig, max_seq: int,
     the ``"flash_decode_fp8"`` key instead: the dtype-aware search sees
     the 1-byte page stream, so the fp8 pool's page size — and the fp8
     kernel's KV block — both come from the fp8 model, not the bf16 one.
+
+    ``fused=True`` (the engine's ``fuse`` flag, wide caches only) sizes
+    pages under ``"flash_decode_oproj"``: the fused kernel's resident
+    wo slab + output accumulator squeeze the VMEM budget the KV block
+    competes for, so the fusion-aware search may pick smaller pages.
     """
     from repro.tune import best_schedule
     g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
     kv_dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
     if kv_dtype.itemsize == 1:
         op, dtype_name = "flash_decode_fp8", jnp.dtype(cfg.dtype).name
+        dims: tuple[int, ...] = (g, max_seq, cfg.head_dim)
+    elif fused:
+        op, dtype_name = "flash_decode_oproj", kv_dtype.name
+        dims = (g, max_seq, cfg.head_dim, cfg.d_model)
     else:
         op, dtype_name = "flash_decode", kv_dtype.name
-    sched = best_schedule(op, (g, max_seq, cfg.head_dim),
-                          dtype_name, cache=cache)
+        dims = (g, max_seq, cfg.head_dim)
+    sched = best_schedule(op, dims, dtype_name, cache=cache)
     return max(1, min(sched.tiles[0], max_seq))
 
 
@@ -176,7 +185,8 @@ def write_prefill(cfg: ModelConfig, paged: dict, dense: dict,
 
 def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
                          page_size: int, use_kernel: bool | None = None,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         fused: bool = False):
     """The ``attn_step`` the paged engine threads through
     ``transformer.decode_step``.
 
@@ -185,6 +195,11 @@ def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
     ``block_tables[b, pos // page]`` slot ``pos % page``, and attention
     runs over ``pos + 1`` positions through ``ops.paged_attention``
     (the flash-decode kernel / its oracle).
+
+    ``fused=True`` (the engine's ``fuse`` flag) routes attention +
+    output projection through ``ops.paged_attention_oproj`` — the
+    per-head attention outputs never round-trip through HBM
+    (docs/fusion.md); quantized wo / fp8 pools fall back inside the op.
     """
     from repro.kernels import ops
 
@@ -202,6 +217,13 @@ def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
         vp = cache["v_pages"].at[page_idx, slot_idx].set(
             v.astype(cache["v_pages"].dtype))
 
+        if fused:
+            out = ops.paged_attention_oproj(
+                q, kp, vp, block_tables, pos + 1, p["wo"],
+                window=window, logit_cap=cfg.attn_logit_cap,
+                use_kernel=use_kernel, interpret=interpret)
+            out = out[:, None, :].astype(hn.dtype)
+            return out, {"k_pages": kp, "v_pages": vp}
         out = ops.paged_attention(q, kp, vp, block_tables, pos + 1,
                                   window=window,
                                   logit_cap=cfg.attn_logit_cap,

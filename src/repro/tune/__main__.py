@@ -26,13 +26,16 @@ def main(argv: list[str] | None = None) -> None:
     from repro.tune.schedule import OPS
     ap.add_argument("op", choices=OPS)
     ap.add_argument("dims", type=int, nargs="+",
-                    help="GEMM ops (matmul, matmul_dgrad, matmul_w8): "
-                         "M N K; conv ops (conv2d, conv2d_dgrad, "
-                         "conv2d_wgrad): X Y C K Fw Fh (output-space X/Y; "
-                         "see docs/training.md for the backward "
-                         "conventions); flash_decode[_fp8]: G S D (GQA "
-                         "group size, max KV length, head dim; see "
-                         "docs/serving.md and docs/quantization.md)")
+                    help="GEMM ops (matmul, matmul_dgrad, matmul_w8, "
+                         "matmul_fused): M N K; conv ops (conv2d, "
+                         "conv2d_dgrad, conv2d_wgrad): X Y C K Fw Fh "
+                         "(output-space X/Y; see docs/training.md for "
+                         "the backward conventions); flash_decode[_fp8]: "
+                         "G S D (GQA group size, max KV length, head "
+                         "dim; see docs/serving.md and "
+                         "docs/quantization.md); qkv_fused: M Nkv K G; "
+                         "flash_decode_oproj: G S D E (E = d_model; "
+                         "see docs/fusion.md)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--stride", type=int, default=1)
     ap.add_argument("--top-n", type=int, default=3,

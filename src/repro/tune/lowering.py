@@ -43,8 +43,8 @@ from repro.core.tpu_adapter import (TPU_V5E, TpuTarget,
                                     default_vmem_budget,
                                     flash_decode_tile_candidates,
                                     matmul_tile_candidates)
-from repro.tune.schedule import (ATTN_OPS, GEMM_OPS, NARROW_WEIGHT_BYTES,
-                                 OpSpec, Schedule)
+from repro.tune.schedule import (ATTN_OPS, FUSED_OPS, GEMM_OPS,
+                                 NARROW_WEIGHT_BYTES, OpSpec, Schedule)
 
 # the one budget rule, shared with the snap loops in core.tpu_adapter
 vmem_budget = default_vmem_budget
@@ -64,6 +64,24 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
         bm, bk, bn = tiles
         return vmem_bytes_required(bm, bk, bn, spec.itemsize,
                                    NARROW_WEIGHT_BYTES[spec.op]) <= budget
+    if spec.op == "matmul_fused":
+        # fused VMEM filter: sized for the worst epilogue (bias + mul +
+        # residual) so one cached schedule serves every combination
+        from repro.kernels.matmul_fused import vmem_bytes_required
+        bm, bk, bn = tiles
+        return vmem_bytes_required(bm, bk, bn, spec.itemsize) <= budget
+    if spec.op == "qkv_fused":
+        from repro.kernels.qkv_fused import vmem_bytes_required
+        _, _, _, G = spec.dims
+        bm, bk, bn = tiles
+        return vmem_bytes_required(bm, bk, bn, G,
+                                   spec.itemsize) <= budget
+    if spec.op == "flash_decode_oproj":
+        from repro.kernels.flash_decode import oproj_vmem_bytes_required
+        G, _, D, E = spec.dims
+        (bkv,) = tiles
+        return oproj_vmem_bytes_required(bkv, G, D, E,
+                                         spec.itemsize) <= budget
     if spec.op in GEMM_OPS:
         from repro.kernels.matmul_blocked import vmem_bytes_required
         bm, bk, bn = tiles
@@ -91,6 +109,14 @@ def divides(spec: OpSpec, tiles: tuple[int, ...]) -> bool:
         M, N, K = spec.dims
         bm, bk, bn = tiles
         return M % bm == 0 and K % bk == 0 and N % bn == 0
+    if spec.op == "qkv_fused":
+        M, Nkv, K, _ = spec.dims
+        bm, bk, bn = tiles
+        return M % bm == 0 and K % bk == 0 and Nkv % bn == 0
+    if spec.op == "flash_decode_oproj":
+        _, S, _, _ = spec.dims
+        (bkv,) = tiles
+        return S % bkv == 0
     if spec.op in ATTN_OPS:
         _, S, _ = spec.dims
         (bkv,) = tiles
@@ -127,6 +153,26 @@ def schedule_to_string(spec: OpSpec,
         bm, bk, bn = tiles
         loops = [Loop(Dim.C, bk), Loop(Dim.X, bm), Loop(Dim.K, bn),
                  Loop(Dim.C, K), Loop(Dim.K, N), Loop(Dim.X, M)]
+    elif spec.op == "qkv_fused":
+        # one grid step touches (G+2)*bn columns of the joint output
+        # from a single A tile — the GEMM string over the joint width
+        M, Nkv, K, G = spec.dims
+        bm, bk, bn = tiles
+        cols = (G + 2) * Nkv
+        loops = [Loop(Dim.C, bk), Loop(Dim.X, bm),
+                 Loop(Dim.K, (G + 2) * bn),
+                 Loop(Dim.C, K), Loop(Dim.K, cols), Loop(Dim.X, M)]
+    elif spec.op == "flash_decode_oproj":
+        # the decode nest proper.  The fused projection's wo traffic is
+        # independent of the KV block, so it cannot change the rank and
+        # is deliberately absent here — E enters the schedule choice
+        # only through the VMEM filter (the resident wo slab squeezes
+        # the budget); the kernel's exact traffic lives in
+        # flash_decode.oproj_hbm_bytes (benchmarked, not ranked)
+        G, S, D, _ = spec.dims
+        (bkv,) = tiles
+        loops = [Loop(Dim.C, bkv), Loop(Dim.X, G), Loop(Dim.K, D),
+                 Loop(Dim.C, S)]
     elif spec.op in ATTN_OPS:
         # one query block (all G rows, all D cols) resident; the grid
         # streams KV pages of block_kv — the running (m, l, acc) state is
@@ -216,16 +262,56 @@ def candidates(spec: OpSpec,
     ``predicted_dram_accesses`` left unset.
     """
     budget = vmem_budget(target, vmem_budget_bytes)
-    if spec.op in ("matmul", "matmul_w8"):
+    if spec.op in ("matmul", "matmul_w8", "matmul_fused"):
         M, N, K = spec.dims
         raw = matmul_tile_candidates(
             M, N, K, spec.itemsize, budget, target, top=top,
             weight_bytes=NARROW_WEIGHT_BYTES.get(spec.op))
+    elif spec.op == "qkv_fused":
+        # search the joint nest (one A stream, (G+2)*Nkv columns), then
+        # express the winner's bn in per-projection columns, snapped to
+        # a lane-aligned divisor of Nkv (integer division by G+2 would
+        # silently drop the MXU alignment every other GEMM candidate
+        # carries); the fused VMEM filter rejects what the joint
+        # residents overflow
+        from repro.core.loopnest import divisors
+        M, Nkv, K, G = spec.dims
+        joint = matmul_tile_candidates(M, (G + 2) * Nkv, K,
+                                       spec.itemsize, budget, target,
+                                       top=top)
+
+        def per_projection(bn_joint: int) -> int:
+            cap = max(bn_joint // (G + 2), 1)
+            aligned = [d for d in divisors(Nkv)
+                       if d <= cap and d % min(target.lane, Nkv) == 0]
+            if aligned:
+                return max(aligned)
+            return max(d for d in divisors(Nkv) if d <= cap)
+
+        raw = []
+        for bm, bk, bn in joint:
+            cand = (bm, bk, per_projection(bn))
+            if cand not in raw:
+                raw.append(cand)
+        raw.append((min(M, 256), min(K, 512), min(Nkv, 128)))
     elif spec.op in ("flash_decode", "flash_decode_fp8"):
         G, S, D = spec.dims
         raw = flash_decode_tile_candidates(
             G, S, D, spec.itemsize, budget, target, top=top,
             kv_bytes=NARROW_WEIGHT_BYTES.get(spec.op))
+    elif spec.op == "flash_decode_oproj":
+        # same candidate family as flash_decode; ONLY the fusion delta
+        # (wo slab + output accumulator) squeezes the budget — the base
+        # decode residents are already accounted for inside the
+        # flash_decode candidate search
+        from repro.kernels.flash_decode import (oproj_vmem_bytes_required,
+                                                vmem_bytes_required)
+        G, S, D, E = spec.dims
+        oproj_extra = (oproj_vmem_bytes_required(0, G, D, E, spec.itemsize)
+                       - vmem_bytes_required(0, G, D, spec.itemsize))
+        raw = flash_decode_tile_candidates(
+            G, S, D, spec.itemsize, max(budget - oproj_extra, 1),
+            target, top=top)
     elif spec.op == "conv2d":
         X, Y, C, K, Fw, Fh = spec.dims
         raw = conv_tile_candidates(X, Y, C, K, Fw, Fh, spec.itemsize,
@@ -248,13 +334,21 @@ def candidates(spec: OpSpec,
     # flash_decode, where the KV stream touches every element once at any
     # block size (the model ties) and the tile doubles as the paged
     # cache's allocation granule: smaller pages waste fewer slots per
-    # request and admit under a finer free-block budget.
+    # request and admit under a finer free-block budget.  The FUSED ops
+    # rank byte-weighted (predicted_dram_bytes): their epilogue/joint
+    # operands can carry different widths, and bytes — not element
+    # counts — are what fusion eliminates.
     def tile_product(s: Schedule) -> int:
         prod = 1
         for t in s.tiles:
             prod *= t
         return prod
-    sign = 1 if spec.op in ATTN_OPS else -1
-    scored.sort(key=lambda s: (s.predicted_dram_accesses,
-                               sign * tile_product(s)))
+    page_like = spec.op in ATTN_OPS or spec.op == "flash_decode_oproj"
+    sign = 1 if page_like else -1
+    if spec.op in FUSED_OPS:
+        scored.sort(key=lambda s: (predicted_dram_bytes(
+            spec, s.tiles, budget, target), sign * tile_product(s)))
+    else:
+        scored.sort(key=lambda s: (s.predicted_dram_accesses,
+                                   sign * tile_product(s)))
     return scored[:top]

@@ -34,6 +34,36 @@ def make_inputs(schedule: Schedule, seed: int = 0):
 
     spec = schedule.spec
     rng = np.random.default_rng(seed)
+    if spec.op == "flash_decode_oproj":
+        # the flash_decode operands plus the per-head wo slab
+        G, S, D, E = spec.dims
+        (page,) = schedule.tiles
+        n_blocks = -(-S // page)
+        q = jnp.asarray(rng.normal(size=(1, 1, G, D)), spec.dtype)
+        kp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
+                         spec.dtype)
+        vp = jnp.asarray(rng.normal(size=(n_blocks, page, 1, D)),
+                         spec.dtype)
+        bt = jnp.asarray(rng.permutation(n_blocks)[None, :], jnp.int32)
+        lengths = jnp.asarray([S], jnp.int32)
+        wo = jnp.asarray(rng.normal(size=(1, G * D, E)) * 0.1,
+                         spec.dtype)
+        return q, kp, vp, bt, lengths, wo
+    if spec.op == "qkv_fused":
+        M, Nkv, K, G = spec.dims
+        x = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
+        wq = jnp.asarray(rng.normal(size=(K, G * Nkv)) * 0.1, spec.dtype)
+        wk = jnp.asarray(rng.normal(size=(K, Nkv)) * 0.1, spec.dtype)
+        wv = jnp.asarray(rng.normal(size=(K, Nkv)) * 0.1, spec.dtype)
+        return x, wq, wk, wv
+    if spec.op == "matmul_fused":
+        # the MLP-block epilogue shape: bias + activation + residual
+        M, N, K = spec.dims
+        a = jnp.asarray(rng.normal(size=(M, K)), spec.dtype)
+        w = jnp.asarray(rng.normal(size=(K, N)) * 0.1, spec.dtype)
+        bias = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+        res = jnp.asarray(rng.normal(size=(M, N)), spec.dtype)
+        return a, w, bias, res
     if spec.op in ("flash_decode", "flash_decode_fp8"):
         # one request, one kv head, paged cache laid out with THIS
         # schedule's block as the page size; a shuffled block table so
@@ -91,7 +121,23 @@ def run_once(schedule: Schedule, inputs, interpret: bool | None = None):
     spec = schedule.spec
     interpret = ops.default_interpret() if interpret is None \
         else bool(interpret)
-    if spec.op == "flash_decode":
+    if spec.op == "flash_decode_oproj":
+        from repro.kernels.flash_decode import flash_decode_oproj
+        q, kp, vp, bt, lengths, wo = inputs
+        out = flash_decode_oproj(q, kp, vp, bt, lengths, wo,
+                                 interpret=interpret)
+    elif spec.op == "qkv_fused":
+        from repro.kernels.qkv_fused import qkv_fused
+        x, wq, wk, wv = inputs
+        bm, bk, bn = schedule.tiles
+        out = qkv_fused(x, wq, wk, wv, bm=bm, bk=bk, bn=bn,
+                        interpret=interpret)[0]
+    elif spec.op == "matmul_fused":
+        a, w, bias, res = inputs
+        out = ops.matmul_fused(a, w, bias=bias, act="gelu", residual=res,
+                               tiles=schedule.tiles, use_kernel=True,
+                               interpret=interpret)
+    elif spec.op == "flash_decode":
         from repro.kernels.flash_decode import flash_decode
         q, kp, vp, bt, lengths = inputs
         out = flash_decode(q, kp, vp, bt, lengths, interpret=interpret)

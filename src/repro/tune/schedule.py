@@ -55,10 +55,29 @@ import numpy as np
 
 from repro.core.loopnest import Problem
 
-GEMM_OPS = ("matmul", "matmul_dgrad", "matmul_w8")
+GEMM_OPS = ("matmul", "matmul_dgrad", "matmul_w8", "matmul_fused")
 CONV_OPS = ("conv2d", "conv2d_dgrad", "conv2d_wgrad")
 ATTN_OPS = ("flash_decode", "flash_decode_fp8")
-OPS = GEMM_OPS + CONV_OPS + ATTN_OPS
+# cross-op fusion (docs/fusion.md): kernels whose output tile absorbs
+# the next op's work instead of round-tripping through HBM.
+#
+# * ``matmul_fused``: GEMM + bias/activation/mul/residual epilogue;
+#   ``dims = (M, N, K)`` like any GEMM (the epilogue operands stream
+#   (bm, bn) tiles — only the VMEM filter differs);
+# * ``qkv_fused``: one weight-stationary pass over all three attention
+#   projections; ``dims = (M, Nkv, K, G)`` where Nkv is the PER-
+#   PROJECTION k/v width and G = Hq/Hkv (the q projection is G*Nkv
+#   wide); tiles (bm, bk, bn) block Nkv, each grid step touching
+#   (G+2)*bn output columns from ONE activation tile;
+# * ``flash_decode_oproj``: flash-decode with the output projection's
+#   row tile fused in; ``dims = (G, S, D, E)`` (E = d_model); the single
+#   ``(block_kv,)`` tile is still the KV block AND the paged cache's
+#   page size — a fusion-enabled cache sizes its pages under THIS key
+#   because the resident wo slab + (1, E) accumulator squeeze the
+#   VMEM budget the block competes for.
+FUSED_OPS = ("matmul_fused", "qkv_fused", "flash_decode_oproj")
+OPS = GEMM_OPS + CONV_OPS + ATTN_OPS + tuple(
+    op for op in FUSED_OPS if op not in GEMM_OPS)
 # quantized ops: the narrow operand (weights / KV pages) is 1 byte wide
 # regardless of the spec's activation dtype
 NARROW_WEIGHT_BYTES = {"matmul_w8": 1, "flash_decode_fp8": 1}
@@ -69,6 +88,12 @@ TILE_RANK = {op: (3 if op in GEMM_OPS else 4) for op in GEMM_OPS + CONV_OPS}
 # its own key (the fp8-aware search typically picks larger pages).
 TILE_RANK["flash_decode"] = 1
 TILE_RANK["flash_decode_fp8"] = 1
+TILE_RANK["qkv_fused"] = 3
+TILE_RANK["flash_decode_oproj"] = 1
+# dims arity per op family (OpSpec validation)
+_N_DIMS = {**{op: 3 for op in GEMM_OPS + ATTN_OPS},
+           **{op: 6 for op in CONV_OPS},
+           "qkv_fused": 4, "flash_decode_oproj": 4}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,7 +108,7 @@ class OpSpec:
     def __post_init__(self):
         if self.op not in OPS:
             raise ValueError(f"unknown op {self.op!r}; expected one of {OPS}")
-        want = 3 if self.op in GEMM_OPS + ATTN_OPS else 6
+        want = _N_DIMS[self.op]
         if len(self.dims) != want:
             raise ValueError(
                 f"{self.op} expects {want} dims, got {self.dims}")
@@ -116,6 +141,18 @@ class OpSpec:
             return Problem.gemm(M=M, N_cols=N, K_reduce=K,
                                 bytes_per_elem=self.itemsize,
                                 weight_bytes=wb)
+        if self.op == "qkv_fused":
+            # the joint nest: one activation stream feeding all
+            # (G+2)*Nkv output columns (docs/fusion.md)
+            M, Nkv, K, G = self.dims
+            return Problem.gemm(M=M, N_cols=(G + 2) * Nkv, K_reduce=K,
+                                bytes_per_elem=self.itemsize)
+        if self.op == "flash_decode_oproj":
+            # the KV stream dominates; the fused projection only squeezes
+            # the VMEM budget (the candidate filter sees E, this doesn't)
+            G, S, D, _ = self.dims
+            return Problem.gemm(M=G, N_cols=D, K_reduce=S,
+                                bytes_per_elem=self.itemsize)
         if self.op in ATTN_OPS:
             # decode attention per (batch, kv-head): the G query rows
             # stream over the S-long KV cache producing D outputs — a
@@ -134,6 +171,12 @@ class OpSpec:
         if self.op in GEMM_OPS:
             M, N, K = self.dims
             shape = f"m{M}n{N}k{K}"
+        elif self.op == "qkv_fused":
+            M, Nkv, K, G = self.dims
+            shape = f"m{M}n{Nkv}k{K}g{G}"
+        elif self.op == "flash_decode_oproj":
+            G, S, D, E = self.dims
+            shape = f"g{G}s{S}d{D}e{E}"
         elif self.op in ATTN_OPS:
             G, S, D = self.dims
             shape = f"g{G}s{S}d{D}"

@@ -324,3 +324,116 @@ def test_shared_prefix_pages_are_read_only_safe():
     assert a.in_use() == 2           # second owner still holds them
     a.free_many(prefix)
     assert a.available() == a.capacity
+
+
+# ====================== cross-op fusion e2e (ISSUE 5) =======================
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "gemma2-9b",
+                                  "recurrentgemma-9b", "mamba2-780m"])
+def test_paged_generate_fused_matches_dense_engine(arch):
+    """Token-exact paged-decode e2e with fusion enabled: the fused
+    paged engine (epilogue-fused MLP, one-pass QKV, oproj-fused decode
+    attention) reproduces the UNFUSED dense engine token for token
+    across the arch families — fusion changes where tensors live, not
+    what they are."""
+    cfg = _cfg(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 9, 12)]
+    dense = DecodeEngine(cfg, params, ServeConfig(max_seq=64))
+    ref = [dense.generate(p[None, :], 10)[0] for p in prompts]
+    fused = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=64, max_batch=2, page_size=8, decode_chunk=4, fuse=True))
+    out = fused.generate(prompts, 10)
+    for i, (a, b) in enumerate(zip(ref, out)):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+def test_dense_engine_fused_matches_unfused():
+    cfg = _cfg("granite-3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 8)).astype(np.int32)
+    ref = DecodeEngine(cfg, params,
+                       ServeConfig(max_seq=32)).generate(prompts, 7)
+    out = DecodeEngine(cfg, params,
+                       ServeConfig(max_seq=32,
+                                   fuse=True)).generate(prompts, 7)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_paged_engine_fused_kernel_path():
+    """Fusion with the Pallas kernels forced on (interpret mode): the
+    oproj-fused flash-decode runs inside the jitted decode chunk."""
+    cfg = _cfg("granite-3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 9)]
+    dense = DecodeEngine(cfg, params, ServeConfig(max_seq=32))
+    ref = [dense.generate(p[None, :], 6)[0] for p in prompts]
+    fused = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=32, max_batch=2, page_size=8, decode_chunk=3,
+        use_kernel=True, interpret=True, fuse=True))
+    out = fused.generate(prompts, 6)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_serving_composes_with_w8_quantization():
+    """ISSUE 5 acceptance: serve --fuse composes with --quantize w8.
+
+    Token-exact: the fused paged engine over int8 projection weights
+    reproduces the fused DENSE engine over the same weights (both run
+    the w8 epilogue-fused semantics).  Drift-bounded: fused-vs-unfused
+    quantized logits differ only in scale-application order — (a@q)*s
+    vs a@(q*s) — which must stay far inside the fake-quant harness
+    tolerance."""
+    from repro.quant import quantize_params
+    cfg = _cfg("granite-3-8b")
+    raw = T.init_params(cfg, jax.random.PRNGKey(2))
+    params = quantize_params(raw)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 9)]
+    dense_fused = DecodeEngine(cfg, params, ServeConfig(max_seq=32,
+                                                        fuse=True))
+    ref = [dense_fused.generate(p[None, :], 6)[0] for p in prompts]
+    fused = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=32, max_batch=2, page_size=8, decode_chunk=3,
+        fuse=True))
+    out = fused.generate(prompts, 6)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+    toks = jnp.asarray(prompts[1][None, :])
+    from repro.kernels import ops as K_ops
+    log_unfused, _ = T.prefill(cfg, params, toks, 32)
+    with K_ops.fused_ops(True):
+        log_fused, _ = T.prefill(cfg, params, toks, 32)
+    np.testing.assert_allclose(np.asarray(log_fused),
+                               np.asarray(log_unfused),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_serving_composes_with_fp8_kv():
+    """--fuse + an fp8 page pool: the oproj fusion falls back to the
+    unfused fp8 decode pair inside ops.paged_attention_oproj, so the
+    composition stays token-exact against the fp8 dense path."""
+    import dataclasses as dc
+    cfg = dc.replace(_cfg("granite-3-8b"),
+                     kv_cache_dtype=jnp.float8_e4m3fn)
+    params = T.init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 8)]
+    dense = DecodeEngine(cfg, params, ServeConfig(max_seq=32))
+    ref = [dense.generate(p[None, :], 5)[0] for p in prompts]
+    fused = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=32, max_batch=2, page_size=8, decode_chunk=2,
+        fuse=True))
+    out = fused.generate(prompts, 5)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
