@@ -1,0 +1,118 @@
+"""Regression guard for the serving-benchmark trajectory file.
+
+Compares a fresh ``serve_bench --smoke --json`` run against the
+committed ``BENCH_serve.json`` and fails loudly when the paged engine
+regresses.  Two kinds of checks, split by what CI can actually hold
+stable:
+
+* **exact** — the record names and the workload (``useful_tokens``)
+  must match the committed file bit-for-bit: the smoke workload is
+  seeded, so any drift means the benchmark or the scheduler changed
+  semantics, not speed;
+* **ratio** — absolute tok/s on a shared CI runner is noise, but the
+  *paged/static speedup* is a same-process, same-machine ratio, so it
+  must stay within ``--tolerance`` (default 0.5: flag halvings, ignore
+  jitter) of the committed speedup.
+
+    # CI wiring (fresh run + guard):
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke --fuse \\
+        --json BENCH_serve.ci.json
+    PYTHONPATH=src python -m benchmarks.check_bench \\
+        --fresh BENCH_serve.ci.json
+
+``--update`` rewrites the committed file from the fresh run instead of
+checking (the explicit, reviewed way to move the baseline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+COMMITTED = os.path.join(REPO, "BENCH_serve.json")
+
+
+def _records(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc["records"]}
+
+
+def _speedup(recs: dict[str, dict], name: str) -> float:
+    return recs[name]["tok_s"] / max(recs["serve_static"]["tok_s"], 1e-9)
+
+
+def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
+    fresh = _records(fresh_path)
+    committed = _records(committed_path)
+    failures: list[str] = []
+
+    missing = sorted(set(committed) - set(fresh))
+    if missing:
+        failures.append(f"records missing from fresh run: {missing}")
+    for name, ref in committed.items():
+        if name not in fresh:
+            continue
+        got = fresh[name]
+        # seeded workload: useful-token counts are exact, not timing
+        if got.get("useful_tokens") != ref.get("useful_tokens"):
+            failures.append(
+                f"{name}: useful_tokens {got.get('useful_tokens')} != "
+                f"committed {ref.get('useful_tokens')} — the workload "
+                f"changed; rerun with --update if intentional")
+        for field in ("tok_s", "p50_us", "p95_us"):
+            if field not in got:
+                failures.append(f"{name}: field {field!r} missing")
+    for name in committed:
+        if name == "serve_static" or name not in fresh:
+            continue
+        ref_x = _speedup(committed, name)
+        got_x = _speedup(fresh, name)
+        floor = ref_x * (1.0 - tolerance)
+        status = "ok" if got_x >= floor else "REGRESSION"
+        print(f"{name}: speedup {got_x:.2f}x vs committed {ref_x:.2f}x "
+              f"(floor {floor:.2f}x) {status}")
+        if got_x < floor:
+            failures.append(
+                f"{name}: paged/static speedup {got_x:.2f}x fell below "
+                f"{floor:.2f}x ({(1 - tolerance):.0%} of the committed "
+                f"{ref_x:.2f}x)")
+
+    if failures:
+        print("\nbenchmark regression guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"benchmark guard OK: {len(committed)} records within "
+          f"tolerance {tolerance}")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, metavar="PATH",
+                    help="JSON written by a fresh serve_bench --smoke "
+                         "--json run")
+    ap.add_argument("--committed", default=COMMITTED, metavar="PATH",
+                    help="baseline to compare against (default: the "
+                         "repo's BENCH_serve.json)")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative drop in paged/static speedup "
+                         "before failing (default 0.5)")
+    ap.add_argument("--update", action="store_true",
+                    help="replace the committed baseline with the fresh "
+                         "run instead of checking")
+    args = ap.parse_args()
+    if args.update:
+        shutil.copyfile(args.fresh, args.committed)
+        print(f"updated {args.committed} from {args.fresh}")
+        return
+    sys.exit(check(args.fresh, args.committed, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,9 +12,10 @@ paged engine streams the same requests through its decode slots,
 admitting by free-page budget and evicting the moment a request
 finishes.
 
-The default model is a serving-scale reduced config (d_model 256); the
-tiny smoke config's per-step compute is smaller than a host dispatch, so
-``--smoke`` exercises the machinery without making a throughput claim.
+Every run — ``--smoke`` included — uses a serving-scale reduced config
+(d_model 256): on the tiny test config per-step compute is smaller than
+a host dispatch and the comparison would measure dispatch counts, not
+scheduling.  ``--smoke`` only shrinks the *workload* to CI size.
 
 Reports decode tokens/sec (useful tokens only) and p50/p95 per-token
 step latency.  CSV contract: ``name,us_per_call,derived``.
@@ -86,12 +87,30 @@ def run_paged(engine, prompts, gens):
         for req in engine.step():
             useful += req.generated
         dt = time.perf_counter() - tb
-        # one scheduler visit emits up to decode_chunk tokens per slot;
-        # normalize to per-token latency
+        # one scheduler visit emits up to decode_chunk tokens per slot
+        # (more with speculative decode); normalize to per-token latency
         step_times += [dt / max(engine.last_step_tokens, 1)] * \
             max(engine.last_step_tokens, 1)
     wall = time.perf_counter() - t0
     return wall, useful, step_times
+
+
+def paged_fields(engine, spec_before=None):
+    """Per-engine configuration + speculative-decode acceptance stats
+    for the JSON record (delta against a pre-warmup snapshot so warmup
+    verify calls don't pollute the measured run)."""
+    fields = {"page_size": int(engine.page_size),
+              "prefill_chunk": int(engine.prefill_chunk),
+              "spec_decode": int(engine.spec)}
+    if engine.spec:
+        st = engine.spec_stats()
+        calls = st["verify_calls"] - (spec_before or {}).get(
+            "verify_calls", 0)
+        toks = st["tokens"] - (spec_before or {}).get("tokens", 0)
+        fields["spec_verify_calls"] = int(calls)
+        fields["spec_mean_accepted"] = round(toks / calls, 3) if calls \
+            else 0.0
+    return fields
 
 
 def main() -> None:
@@ -104,40 +123,60 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny model + workload for CI")
+                    help="CI-sized workload (same serving-scale model)")
     ap.add_argument("--fuse", action="store_true",
                     help="also run the paged engine with cross-op "
                          "fused kernels (docs/fusion.md) and report a "
                          "fused-vs-unfused section")
+    ap.add_argument("--spec", type=int, default=2,
+                    help="draft tokens per speculative decode step for "
+                         "the paged engine (0 -> off)")
+    ap.add_argument("--decode-chunk", type=int, default=4,
+                    help="decode steps fused per scheduler visit; small "
+                         "chunks turn slots over faster on heavy-tailed "
+                         "budgets (finished slots leave, queued work "
+                         "enters, between chunks)")
+    ap.add_argument("--prefill-chunk", type=int, default=-1,
+                    help="paged prefill chunk (-1 -> auto-sized from "
+                         "the VMEM blocking model, 0 -> whole-prompt "
+                         "joins)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every record as machine-readable "
                          "JSON (the BENCH_serve.json trajectory file)")
     args = ap.parse_args()
     if args.smoke:
-        args.requests, args.gen, args.prompt_len = 6, 8, 12
-        args.max_seq, args.max_batch = 32, 2
+        # large enough that per-step latency percentiles are taken over
+        # dozens of steps, the heavy-tailed budget draw can't collapse
+        # the whole workload to a handful of useful tokens (the old
+        # 6-request/gen-8 draw bottomed out at useful=23), and the
+        # batch is wide enough that lock-step padding waste — the thing
+        # continuous batching exists to remove — actually shows up
+        args.requests, args.gen, args.prompt_len = 16, 48, 16
+        args.max_seq, args.max_batch = 64, 4
 
     cfg = dataclasses.replace(get_reduced(args.arch), dtype=jnp.float32)
-    if not args.smoke:
-        # serving-scale reduced model: per-step compute must dominate
-        # host dispatch for the throughput comparison to mean anything
-        cfg = dataclasses.replace(cfg, d_model=256, n_layers=4,
-                                  n_heads=8, n_kv_heads=4, d_ff=1024,
-                                  vocab=4096)
+    # serving-scale reduced model: per-step compute must dominate host
+    # dispatch for the throughput comparison to mean anything
+    cfg = dataclasses.replace(cfg, d_model=256, n_layers=4,
+                              n_heads=8, n_kv_heads=4, d_ff=1024,
+                              vocab=4096)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     prompts, gens = make_workload(cfg, args.requests, args.prompt_len,
                                   args.gen)
 
+    chunk = None if args.prefill_chunk < 0 else args.prefill_chunk
     static = DecodeEngine(cfg, params, ServeConfig(max_seq=args.max_seq))
     paged = PagedEngine(cfg, params, PagedServeConfig(
         max_seq=args.max_seq, max_batch=args.max_batch,
-        page_size=args.page_size or None))
+        page_size=args.page_size or None, prefill_chunk=chunk,
+        spec_decode=args.spec, decode_chunk=args.decode_chunk))
 
     # warm the compile caches outside the timed region: one full pass of
     # the same workload per engine (compiles are keyed by batch width,
     # token budget and prefill bucket — the workload exercises them all)
     run_static(static, prompts, gens, args.max_batch)
     run_paged(paged, prompts, gens)
+    spec0 = paged.spec_stats() if paged.spec else None
 
     s_wall, s_useful, s_steps = run_static(static, prompts, gens,
                                            args.max_batch)
@@ -156,11 +195,11 @@ def main() -> None:
          p95_us=round(s95, 1), useful_tokens=int(s_useful))
     emit("serve_paged", p_wall / max(p_useful, 1) * 1e6,
          f"{p_tps:.1f} tok/s p50={p50:.0f}us p95={p95:.0f}us "
-         f"useful={p_useful} page={page} "
-         f"speedup={p_tps / max(s_tps, 1e-9):.2f}x",
+         f"useful={p_useful} page={page} chunk={paged.prefill_chunk} "
+         f"spec={paged.spec} speedup={p_tps / max(s_tps, 1e-9):.2f}x",
          tok_s=round(p_tps, 2), p50_us=round(p50, 1),
          p95_us=round(p95, 1), useful_tokens=int(p_useful),
-         page_size=int(page))
+         **paged_fields(paged, spec0))
 
     if args.fuse:
         # fused-vs-unfused paged section: same workload, same slots,
@@ -168,8 +207,11 @@ def main() -> None:
         # the outputs comparable token-for-token with the run above
         fused = PagedEngine(cfg, params, PagedServeConfig(
             max_seq=args.max_seq, max_batch=args.max_batch,
-            page_size=args.page_size or None, fuse=True))
+            page_size=args.page_size or None, fuse=True,
+            prefill_chunk=chunk, spec_decode=args.spec,
+            decode_chunk=args.decode_chunk))
         run_paged(fused, prompts, gens)          # warm compiles
+        fspec0 = fused.spec_stats() if fused.spec else None
         f_wall, f_useful, f_steps = run_paged(fused, prompts, gens)
         assert f_useful == sum(gens), (f_useful, sum(gens))
         f_tps = f_useful / f_wall
@@ -180,7 +222,7 @@ def main() -> None:
              f"vs-unfused={f_tps / max(p_tps, 1e-9):.2f}x",
              tok_s=round(f_tps, 2), p50_us=round(f50, 1),
              p95_us=round(f95, 1), useful_tokens=int(f_useful),
-             page_size=int(fused.page_size))
+             **paged_fields(fused, fspec0))
 
     if args.json:
         write_json(args.json)

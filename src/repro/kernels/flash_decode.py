@@ -39,7 +39,8 @@ from repro.kernels.flash_attention import NEG_INF
 
 def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
                         bytes_per_elem: int = 2,
-                        kv_bytes: int | None = None) -> int:
+                        kv_bytes: int | None = None,
+                        q_span: int = 1) -> int:
     """VMEM footprint of one grid step of :func:`flash_decode`.
 
     The K and V pages are streamed (Pallas double-buffers them across
@@ -51,26 +52,51 @@ def vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
     ``kv_bytes`` is the page element width when the cache is quantized
     (fp8: 1) — only the streamed pages narrow; q/out keep their dtype
     and the running statistics stay fp32.
+
+    ``q_span`` is the number of query *positions* folded into the q
+    block (speculative verify / chunked prefill): everything that scales
+    with the query rows — q/o tiles, scores, running stats — multiplies
+    by it, while the streamed pages do not.  That asymmetry is what lets
+    ``serve.kv_cache.choose_prefill_chunk`` price a multi-page chunk
+    against the same VMEM budget the page size was tuned under.
     """
     kvb = kv_bytes or bytes_per_elem
+    rows = groups * q_span
     streamed = 2 * 2 * block_kv * head_dim * kvb                # K + V pages
-    q_tile = groups * head_dim * bytes_per_elem
-    o_tile = groups * head_dim * bytes_per_elem
-    scores = groups * block_kv * 4
-    acc = groups * head_dim * 4 + 2 * groups * 4                # acc, m, l
+    q_tile = rows * head_dim * bytes_per_elem
+    o_tile = rows * head_dim * bytes_per_elem
+    scores = rows * block_kv * 4
+    acc = rows * head_dim * 4 + 2 * rows * 4                    # acc, m, l
     return streamed + q_tile + o_tile + scores + acc
 
 
-def _block_mask(len_ref, b, i, block_kv: int, window: int | None):
-    """Validity mask for KV block ``i`` of request ``b``."""
+def _block_mask(len_ref, b, i, block_kv: int, window: int | None,
+                q_span: int = 1, groups: int = 1):
+    """Validity mask for KV block ``i`` of request ``b``.
+
+    With ``q_span == 1`` (plain decode) the mask is ``(1, block_kv)`` and
+    broadcasts over the G query rows.  With ``q_span > 1`` the q block
+    holds ``q_span`` consecutive *positions* of ``groups`` rows each
+    (position-major: row r is position offset ``r // groups``), and the
+    mask is per-row causal: position offset t sees ``kpos < length + t``
+    — ``lengths`` counts the cache *including the first* spanned token,
+    exactly the single-token convention extended row-wise.
+    """
     length = len_ref[b]                                  # tokens incl. current
     kpos = i * block_kv + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_kv), 1)                     # logical positions
-    mask = kpos < length
+    if q_span == 1:
+        mask = kpos < length
+        if window is not None:
+            # same rule as the dense decode path: query position is
+            # length-1, and it sees kpos > qpos - window
+            mask &= kpos > (length - 1) - window
+        return mask
+    offs = jax.lax.broadcasted_iota(
+        jnp.int32, (q_span * groups, 1), 0) // groups    # row -> position off
+    mask = kpos < length + offs
     if window is not None:
-        # same rule as the dense decode path: query position is length-1,
-        # and it sees kpos > qpos - window
-        mask &= kpos > (length - 1) - window
+        mask &= kpos > (length - 1 + offs) - window
     return mask
 
 
@@ -111,19 +137,20 @@ def _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref):
 def _decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                    m_ref, l_ref, acc_ref, *, scale: float,
                    window: int | None, logit_cap: float | None,
-                   block_kv: int, n_blocks: int):
+                   block_kv: int, n_blocks: int, q_span: int = 1,
+                   groups: int = 1):
     b = pl.program_id(0)
     i = pl.program_id(2)
     _decode_init(i, m_ref, l_ref, acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    q = q_ref[0, 0].astype(jnp.float32)                  # (q_span*G, D)
     k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
     v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if logit_cap is not None:
         s = logit_cap * jnp.tanh(s / logit_cap)
 
-    mask = _block_mask(len_ref, b, i, block_kv, window)
+    mask = _block_mask(len_ref, b, i, block_kv, window, q_span, groups)
     _softmax_update(s, v, mask, m_ref, l_ref, acc_ref)
     _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref)
 
@@ -132,7 +159,7 @@ def _decode_fp8_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        scale: float, window: int | None,
                        logit_cap: float | None, block_kv: int,
-                       n_blocks: int):
+                       n_blocks: int, q_span: int = 1, groups: int = 1):
     """fp8-page variant: K/V stream in at 1 byte/elem and dequantize
     in-VMEM with the per-kv-head fp32 scales.  The scales are scalars
     within a grid step, so K's folds into the score block and V's into
@@ -151,20 +178,36 @@ def _decode_fp8_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
     if logit_cap is not None:
         s = logit_cap * jnp.tanh(s / logit_cap)
 
-    mask = _block_mask(len_ref, b, i, block_kv, window)
+    mask = _block_mask(len_ref, b, i, block_kv, window, q_span, groups)
     _softmax_update(s, v * vs, mask, m_ref, l_ref, acc_ref)
     _decode_finish(i, n_blocks, o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "logit_cap",
-                                             "interpret"))
+                                             "q_span", "interpret"))
 def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  block_tables: jax.Array, lengths: jax.Array, *,
                  window: int | None = None,
                  logit_cap: float | None = None,
+                 q_span: int = 1,
                  interpret: bool = False) -> jax.Array:
-    """Paged single-token attention.  Returns (B, Hkv, G, D)."""
-    b, hkv, g, d = q.shape
+    """Paged attention over one q block per (batch, kv-head).
+
+    ``q`` is (B, Hkv, q_span*G, D): with ``q_span == 1`` the classic
+    single-token decode; with ``q_span > 1`` the rows hold ``q_span``
+    consecutive positions (position-major — row r is position offset
+    ``r // G``) whose K/V must already be scattered into the pages, and
+    each position's rows get a causal per-row mask (``lengths`` still
+    counts the cache including the FIRST spanned token).  This is the
+    one kernel capability behind both speculative verify and chunked
+    prefill: the GQA grouping already streams a multi-row q block, so
+    spanning positions costs no extra KV traffic.  Returns the same
+    shape as ``q``.
+    """
+    b, hkv, gtot, d = q.shape
+    if gtot % q_span:
+        raise ValueError(f"q rows {gtot} not divisible by q_span {q_span}")
+    g = gtot // q_span
     _, page, _, _ = k_pages.shape
     n_blocks = block_tables.shape[1]
     scale = d ** -0.5
@@ -172,51 +215,57 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         num_scalar_prefetch=2,
         grid=(b, hkv, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, gtot, d),
+                         lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
             pl.BlockSpec((1, page, 1, d),
                          lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
             pl.BlockSpec((1, page, 1, d),
                          lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
+        out_specs=pl.BlockSpec((1, 1, gtot, d),
                                lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),     # running max m
-            pltpu.VMEM((g, 1), jnp.float32),     # running denom l
-            pltpu.VMEM((g, d), jnp.float32),     # accumulator (OB)
+            pltpu.VMEM((gtot, 1), jnp.float32),  # running max m
+            pltpu.VMEM((gtot, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((gtot, d), jnp.float32),  # accumulator (OB)
         ],
     )
     return pl.pallas_call(
         functools.partial(_decode_kernel, scale=scale, window=window,
                           logit_cap=logit_cap, block_kv=page,
-                          n_blocks=n_blocks),
+                          n_blocks=n_blocks, q_span=q_span, groups=g),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gtot, d), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "logit_cap",
-                                             "interpret"))
+                                             "q_span", "interpret"))
 def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                      k_scale: jax.Array, v_scale: jax.Array,
                      block_tables: jax.Array, lengths: jax.Array, *,
                      window: int | None = None,
                      logit_cap: float | None = None,
+                     q_span: int = 1,
                      interpret: bool = False) -> jax.Array:
-    """Paged single-token attention over an fp8-quantized page pool.
+    """Paged attention over an fp8-quantized page pool.
 
-    Same contract as :func:`flash_decode` except ``k_pages``/``v_pages``
-    are fp8 (``float8_e4m3fn``) and ``k_scale``/``v_scale`` are fp32
-    per-kv-head dequantization scales of shape ``(Hkv,)`` (pass ones for
-    a pure-cast cache).  The pages stream from HBM at one byte per
-    element; dequantization happens in VMEM inside the kernel, so HBM
-    traffic for the dominant decode operand is halved vs bf16 — which is
-    why the page size comes from the ``"flash_decode_fp8"`` schedule key.
-    Returns (B, Hkv, G, D) in ``q.dtype``.
+    Same contract as :func:`flash_decode` (including the multi-position
+    ``q_span`` q block) except ``k_pages``/``v_pages`` are fp8
+    (``float8_e4m3fn``) and ``k_scale``/``v_scale`` are fp32 per-kv-head
+    dequantization scales of shape ``(Hkv,)`` (pass ones for a pure-cast
+    cache).  The pages stream from HBM at one byte per element;
+    dequantization happens in VMEM inside the kernel, so HBM traffic for
+    the dominant decode operand is halved vs bf16 — which is why the
+    page size comes from the ``"flash_decode_fp8"`` schedule key.
+    Returns the same shape as ``q`` in ``q.dtype``.
     """
-    b, hkv, g, d = q.shape
+    b, hkv, gtot, d = q.shape
+    if gtot % q_span:
+        raise ValueError(f"q rows {gtot} not divisible by q_span {q_span}")
+    g = gtot // q_span
     _, page, _, _ = k_pages.shape
     n_blocks = block_tables.shape[1]
     scale = d ** -0.5
@@ -226,7 +275,8 @@ def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         num_scalar_prefetch=2,
         grid=(b, hkv, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
+            pl.BlockSpec((1, 1, gtot, d),
+                         lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
             pl.BlockSpec((1, page, 1, d),
                          lambda bi, h, i, bt, ln: (bt[bi, i], 0, h, 0)),
             pl.BlockSpec((1, page, 1, d),
@@ -234,20 +284,20 @@ def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pl.BlockSpec((1, 1), lambda bi, h, i, bt, ln: (h, 0)),
             pl.BlockSpec((1, 1), lambda bi, h, i, bt, ln: (h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, d),
+        out_specs=pl.BlockSpec((1, 1, gtot, d),
                                lambda bi, h, i, bt, ln: (bi, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),     # running max m
-            pltpu.VMEM((g, 1), jnp.float32),     # running denom l
-            pltpu.VMEM((g, d), jnp.float32),     # accumulator (OB)
+            pltpu.VMEM((gtot, 1), jnp.float32),  # running max m
+            pltpu.VMEM((gtot, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((gtot, d), jnp.float32),  # accumulator (OB)
         ],
     )
     return pl.pallas_call(
         functools.partial(_decode_fp8_kernel, scale=scale, window=window,
                           logit_cap=logit_cap, block_kv=page,
-                          n_blocks=n_blocks),
+                          n_blocks=n_blocks, q_span=q_span, groups=g),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gtot, d), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       q, k_pages, v_pages, ks, vs)
@@ -418,7 +468,8 @@ def paged_attention_fp8_ref(q: jax.Array, k_pages: jax.Array,
                             v_scale: jax.Array, block_tables: jax.Array,
                             lengths: jax.Array, *,
                             window: int | None = None,
-                            logit_cap: float | None = None) -> jax.Array:
+                            logit_cap: float | None = None,
+                            q_span: int = 1) -> jax.Array:
     """jnp oracle for :func:`flash_decode_fp8`: dequantize the page pool
     in fp32, then the dense masked softmax of :func:`paged_attention_ref`.
     """
@@ -428,21 +479,24 @@ def paged_attention_fp8_ref(q: jax.Array, k_pages: jax.Array,
     return paged_attention_ref(q, k_pages.astype(jnp.float32) * ks,
                                v_pages.astype(jnp.float32) * vs,
                                block_tables, lengths, window=window,
-                               logit_cap=logit_cap)
+                               logit_cap=logit_cap, q_span=q_span)
 
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
                         v_pages: jax.Array, block_tables: jax.Array,
                         lengths: jax.Array, *,
                         window: int | None = None,
-                        logit_cap: float | None = None) -> jax.Array:
+                        logit_cap: float | None = None,
+                        q_span: int = 1) -> jax.Array:
     """jnp oracle: gather pages by block table, dense masked softmax.
 
-    Bit-comparable semantics to :func:`flash_decode` (same masking rules,
+    Bit-comparable semantics to :func:`flash_decode` (same masking rules
+    — including the per-position rows of a ``q_span > 1`` block — and
     fp32 math); the correctness oracle in tests and the fast vectorized
     path off-TPU.
     """
-    b, hkv, g, d = q.shape
+    b, hkv, gtot, d = q.shape
+    g = gtot // q_span
     _, page, _, _ = k_pages.shape
     nb = block_tables.shape[1]
     k = k_pages[block_tables].reshape(b, nb * page, hkv, d)
@@ -452,10 +506,12 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
     if logit_cap is not None:
         s = logit_cap * jnp.tanh(s / logit_cap)
     kpos = jnp.arange(nb * page)
-    valid = kpos[None, :] < lengths[:, None]
+    offs = jnp.arange(gtot) // g                         # row -> position off
+    lim = lengths[:, None] + offs[None, :]               # (b, gtot)
+    valid = kpos[None, None, :] < lim[..., None]
     if window is not None:
-        valid &= kpos[None, :] > (lengths[:, None] - 1) - window
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        valid &= kpos[None, None, :] > (lim[..., None] - 1) - window
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgl,blhd->bhgd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)

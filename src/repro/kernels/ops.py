@@ -517,6 +517,14 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     per logical KV block; lengths: (B,) cache length per request
     *including* the token being decoded.  Returns (B, Hq, D).
 
+    A 4-D ``q`` of shape (B, S, Hq, D) is the multi-position form
+    (speculative verify / chunked prefill): the S positions are
+    consecutive, their K/V already scattered into the pages, and
+    ``lengths`` counts the cache including the FIRST of them.  Rows fold
+    into the kernel's GQA group dim (``q_span = S``) so all S positions
+    score in ONE flash-decode call over the same streamed pages; each
+    position gets a causal per-row mask.  Returns (B, S, Hq, D).
+
     The page size doubles as the flash-decode kernel's KV block; it is
     chosen by ``repro.tune`` under the ``"flash_decode"`` op key when the
     paged cache is built (``serve.kv_cache.choose_page_size``).  With
@@ -535,11 +543,26 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     from repro.kernels.flash_decode import (flash_decode, flash_decode_fp8,
                                             paged_attention_fp8_ref,
                                             paged_attention_ref)
-    b, hq, d = q.shape
+    multi = q.ndim == 4
+    if multi:
+        b, span, hq, d = q.shape
+    else:
+        b, hq, d = q.shape
+        span = 1
     hkv = k_pages.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     g = hq // hkv
-    qg = q.reshape(b, hkv, g, d)
+    if multi:
+        # (B, S, Hq, D) -> (B, Hkv, S*G, D) with rows position-major
+        # inside each kv head: row r of head h is position offset r // G,
+        # local group r % G — the layout flash_decode's q_span mask
+        # expects.
+        qg = (q.transpose(0, 2, 1, 3)
+               .reshape(b, hkv, g, span, d)
+               .transpose(0, 1, 3, 2, 4)
+               .reshape(b, hkv, span * g, d))
+    else:
+        qg = q.reshape(b, hkv, g, d)
     fp8 = jnp.dtype(k_pages.dtype).itemsize == 1
     scaled = k_scale is not None or v_scale is not None
     if scaled and not fp8:
@@ -553,17 +576,22 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         if fp8:
             out = flash_decode_fp8(qg, k_pages, v_pages, ks, vs,
                                    block_tables, lengths, window=window,
-                                   logit_cap=logit_cap, interpret=interpret)
+                                   logit_cap=logit_cap, q_span=span,
+                                   interpret=interpret)
         else:
             out = flash_decode(qg, k_pages, v_pages, block_tables, lengths,
                                window=window, logit_cap=logit_cap,
-                               interpret=interpret)
+                               q_span=span, interpret=interpret)
     elif fp8 and scaled:
         out = paged_attention_fp8_ref(qg, k_pages, v_pages, ks, vs,
                                       block_tables, lengths, window=window,
-                                      logit_cap=logit_cap)
+                                      logit_cap=logit_cap, q_span=span)
     else:
         out = paged_attention_ref(qg, k_pages, v_pages, block_tables,
                                   lengths, window=window,
-                                  logit_cap=logit_cap)
+                                  logit_cap=logit_cap, q_span=span)
+    if multi:
+        return (out.reshape(b, hkv, span, g, d)
+                   .transpose(0, 2, 1, 3, 4)
+                   .reshape(b, span, hq, d))
     return out.reshape(b, hq, d)

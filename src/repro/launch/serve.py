@@ -60,6 +60,14 @@ def main() -> None:
                          "epilogue-fused MLP GEMMs, one-pass QKV, and "
                          "(paged) oproj-fused flash decode; composes "
                          "with --quantize (docs/fusion.md)")
+    ap.add_argument("--prefill-chunk", type=int, default=-1,
+                    help="paged: prefill chunk size in tokens (-1 -> "
+                         "auto-sized from the VMEM blocking model, 0 -> "
+                         "whole-prompt joins; attention-only stacks)")
+    ap.add_argument("--spec", type=int, default=0,
+                    help="paged: draft tokens per speculative "
+                         "draft-verify decode step (0 -> off; greedy "
+                         "only, attention-only stacks)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -80,7 +88,10 @@ def main() -> None:
         engine = PagedEngine(cfg, params, PagedServeConfig(
             max_seq=args.max_seq, max_batch=args.batch,
             page_size=args.page_size or None,
-            temperature=args.temperature, fuse=args.fuse))
+            temperature=args.temperature, fuse=args.fuse,
+            prefill_chunk=None if args.prefill_chunk < 0
+            else args.prefill_chunk,
+            spec_decode=args.spec))
         n_req = args.requests or args.batch
         lo = max(1, args.prompt_len // 2) if args.mixed_lens \
             else args.prompt_len
@@ -92,8 +103,14 @@ def main() -> None:
         dt = time.perf_counter() - t0
         tps = n_req * args.gen / dt
         print(f"paged engine: page={engine.page_size} "
+              f"chunk={engine.prefill_chunk} spec={engine.spec} "
               f"slots={args.batch} requests={n_req}"
               + (" fused" if args.fuse else ""))
+        if engine.spec:
+            st = engine.spec_stats()
+            print(f"speculative decode: {st['verify_calls']} verify calls "
+                  f"-> {st['tokens']} tokens "
+                  f"(mean accepted span {st['mean_accepted']:.2f})")
         print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
         print("sample:", out[0, :16].tolist())
         return

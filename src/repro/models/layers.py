@@ -146,31 +146,41 @@ def attention_apply(cfg: ModelConfig, params: dict, x: jax.Array,
     return out, {"k": ck, "v": cv}
 
 
-def qkv_decode_proj(cfg: ModelConfig, params: dict, x: jax.Array,
-                    positions: jax.Array):
-    """One-token Q/K/V projection + rope — the single definition shared
-    by the dense decode path (:func:`attention_decode`) and the paged
-    decode path (``serve.kv_cache.make_paged_attn_step``), so the two
-    can never drift apart.  x: (B, D); positions: (B, 1).
-    Returns q (B, Hq, D), k/v (B, Hkv, D)."""
-    b = x.shape[0]
+def qkv_span_proj(cfg: ModelConfig, params: dict, x: jax.Array,
+                  positions: jax.Array):
+    """Q/K/V projection + rope for a span of S consecutive tokens — the
+    single definition shared by the dense decode path
+    (:func:`attention_decode`, S=1), the paged decode path
+    (``serve.kv_cache.make_paged_attn_step``) and the multi-token
+    verify/chunked-prefill path (``make_paged_span_step``), so they can
+    never drift apart.  x: (B, S, D); positions: (B, S).
+    Returns q (B, S, Hq, D), k/v (B, S, Hkv, D)."""
+    b, s, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     if ops.fused_ops_enabled():
         # fused path falls back to the three ops.linear calls itself
         # when the weights are QuantizedTensors (w8 semantics intact)
-        q, k, v = ops.qkv_fused(x, params["wq"], params["wk"],
-                                params["wv"])
-        q, k, v = (q.reshape(b, 1, hq, hd), k.reshape(b, 1, hkv, hd),
-                   v.reshape(b, 1, hkv, hd))
+        q, k, v = ops.qkv_fused(x.reshape(b * s, -1), params["wq"],
+                                params["wk"], params["wv"])
+        q, k, v = (q.reshape(b, s, hq, hd), k.reshape(b, s, hkv, hd),
+                   v.reshape(b, s, hkv, hd))
     else:
         # ops.linear (not a bare @): quantized params carry
         # QuantizedTensor projection weights, which linear dispatches to
         # the w8 kernel / dequant oracle (docs/quantization.md)
-        q = ops.linear(x, params["wq"]).reshape(b, 1, hq, hd)
-        k = ops.linear(x, params["wk"]).reshape(b, 1, hkv, hd)
-        v = ops.linear(x, params["wv"]).reshape(b, 1, hkv, hd)
+        q = ops.linear(x, params["wq"]).reshape(b, s, hq, hd)
+        k = ops.linear(x, params["wk"]).reshape(b, s, hkv, hd)
+        v = ops.linear(x, params["wv"]).reshape(b, s, hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def qkv_decode_proj(cfg: ModelConfig, params: dict, x: jax.Array,
+                    positions: jax.Array):
+    """One-token wrapper over :func:`qkv_span_proj`.  x: (B, D);
+    positions: (B, 1).  Returns q (B, Hq, D), k/v (B, Hkv, D)."""
+    q, k, v = qkv_span_proj(cfg, params, x[:, None, :], positions)
     return q[:, 0], k[:, 0], v[:, 0]
 
 

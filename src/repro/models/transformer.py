@@ -481,9 +481,29 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
     cache implementation — the paged serving engine threads its
     flash-decode step through here so every non-attention layer reuses
     this exact code path.
+
+    A 2-D ``token`` of shape (B, S) is the multi-token span form
+    (speculative verify / chunked prefill): the S tokens occupy
+    consecutive positions starting at ``pos``, and logits come back for
+    EVERY position, (B, S, V).  Only the attention mixers support spans
+    (the rglru/ssd state updates are strictly one-token), so this form
+    requires a span-capable ``attn_step``
+    (``serve.kv_cache.make_paged_span_step``) and an attention-only
+    ``layer_pattern``; the norm/FFN/MoE structure is shape-polymorphic
+    and shared verbatim.
     """
+    single = token.ndim == 1
+    if not single:
+        if attn_step is None:
+            raise ValueError("multi-token decode_step needs a span-capable "
+                             "attn_step (the dense cache is one-token)")
+        bad = [m for m in cfg.layer_pattern if m not in ("global", "local")]
+        if bad:
+            raise ValueError(f"multi-token decode_step is attention-only; "
+                             f"layer_pattern has {bad}")
     emb = params["embed"]["embedding"]
-    h = jnp.take(emb, token[:, None], axis=0) * (cfg.d_model ** 0.5)
+    h = jnp.take(emb, token[:, None] if single else token,
+                 axis=0) * (cfg.d_model ** 0.5)
     pattern = cfg.layer_pattern
 
     def scan_step(h, xs):
@@ -507,7 +527,9 @@ def decode_step(cfg: ModelConfig, params: dict, token: jax.Array,
                               attn_step)
         new_tail.append(nc)
     h = L.rmsnorm(params["final_norm"], h)
-    logits = logits_fn(cfg, params, h)[:, 0, :]
+    logits = logits_fn(cfg, params, h)
+    if single:
+        logits = logits[:, 0, :]
     return logits, {"layers": new_layer_caches, "tail": new_tail}
 
 

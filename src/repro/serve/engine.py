@@ -7,11 +7,27 @@ transfer to the host once per call, not once per token.
 
 ``PagedEngine`` is the production path (docs/serving.md): a paged KV
 cache whose page size comes from the analytical blocking model
-(``tune`` op key ``"flash_decode"``), bucketed true-length prefill, and
-a continuous-batching scheduler that joins new prefills into the running
-decode batch each step and evicts finished requests.  The decode step is
-fully jitted — paged flash-decode attention, device-side sampling, and
-an on-device output buffer read back only when a request finishes.
+(``tune`` op key ``"flash_decode"``), a decode-priority continuous-
+batching scheduler, and three mechanisms that keep steady-state decode
+from ever stalling:
+
+* **chunked prefill** — prompts are cached ``prefill_chunk`` tokens at a
+  time (a whole number of KV pages, sized by
+  ``kv_cache.choose_prefill_chunk`` under the same VMEM budget as the
+  page size) through the multi-position form of the flash-decode kernel,
+  interleaved with decode steps instead of monopolizing one;
+* **speculative decode** — an n-gram self-drafted draft-verify step
+  scores ``spec_decode`` draft tokens plus the current token in ONE
+  flash-decode call (the kernel's GQA grouping carries the multi-row q
+  block) and accepts the longest greedy-matching prefix, so accepted
+  tokens amortize the per-step host overhead;
+* **persistent device state** — block tables and lengths live on device
+  and are updated incrementally at admission/eviction instead of being
+  rebuilt and re-uploaded every step.
+
+The decode step remains fully jitted — paged flash-decode attention,
+device-side sampling, and an on-device output buffer read back only when
+a request finishes.
 """
 
 from __future__ import annotations
@@ -120,6 +136,12 @@ class PagedServeConfig:
     fuse: bool = False             # cross-op fused kernels (docs/fusion.md)
     buckets: tuple[int, ...] | None = None   # prefill padding lengths
     decode_chunk: int = 8          # decode steps per scheduler visit
+    prefill_chunk: int | None = None   # None -> auto-sized; 0 -> whole-
+    #                                    prompt joins (legacy behavior)
+    spec_decode: int = 0           # draft tokens per verify step (0 = off;
+    #                                greedy only, attention-only stacks)
+    age_limit: int = 8             # admission rounds before a waiting head
+    #                                suspends backfill (anti-starvation)
     use_kernel: bool | None = None  # paged attention: None -> TPU only
     interpret: bool | None = None
 
@@ -147,17 +169,30 @@ class PagedEngine:
     """Request/response serving over the paged cache.
 
     ``submit()`` enqueues a prompt; ``step()`` runs one scheduler
-    iteration (admit + prefill joins, one jitted *decode chunk*,
-    evictions) and returns the requests that finished; ``generate()`` is
+    iteration and returns the requests that finished; ``generate()`` is
     the batch-convenience wrapper used by the examples and benchmarks.
 
-    A decode chunk is up to ``decode_chunk`` token steps fused into one
-    ``lax.scan`` — the scheduler's quantum.  Per-slot activity is masked
-    inside the scan (a slot that exhausts its budget mid-chunk keeps its
-    length frozen and its output buffer untouched), so chunking changes
-    scheduling granularity, never results.  Page reservations are made
-    in full at admission, which is what makes block tables stable across
-    a chunk.
+    A step executes the scheduler's :class:`~repro.serve.scheduler.
+    StepPlan` in decode-priority order: admission first (chunk-prefilled
+    requests only reserve state; legacy joins prefill whole prompts),
+    then ONE jitted decode chunk covering every decode-ready slot, then
+    prefill chunks backfilling the leftover token budget, then eviction.
+    A decode chunk is up to ``decode_chunk`` steps fused into one
+    ``lax.scan`` — per-slot activity is masked inside the scan, so
+    chunking changes scheduling granularity, never results.  With
+    ``spec_decode=k`` each scan step is a draft-verify call that can
+    emit up to ``k+1`` tokens (greedy semantics preserved exactly:
+    tokens are accepted only while they match the argmax chain).
+
+    Page reservations are made in full at admission, which is what makes
+    block tables stable across a chunk; the tables themselves live on
+    device and are updated incrementally at admission/eviction — steady-
+    state decode re-uploads nothing.
+
+    Chunked prefill and speculative decode need every mixer to be
+    attention (the rglru/ssd state updates are strictly one-token);
+    hybrid stacks silently fall back to whole-prompt joins and plain
+    decode, keeping one engine API across all architectures.
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, sc: PagedServeConfig):
@@ -166,6 +201,8 @@ class PagedEngine:
                 "paged serving covers decoder-only token models")
         self.cfg, self.params, self.sc = cfg, params, sc
         has_attn = any(p in ("global", "local") for p in cfg.layer_pattern)
+        attn_only = has_attn and all(
+            p in ("global", "local") for p in cfg.layer_pattern)
         self.page_size = sc.page_size or (
             KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse) if has_attn
             else min(sc.max_seq, 128))   # attention-free: pages unused
@@ -174,22 +211,47 @@ class PagedEngine:
         self.cache = KV.init_paged_cache(cfg, sc.max_batch, n_pages,
                                          self.page_size)
         self.scheduler = Scheduler(sc.max_batch, self.page_size,
-                                   KV.PageAllocator(n_pages), sc.max_seq)
+                                   KV.PageAllocator(n_pages), sc.max_seq,
+                                   age_limit=sc.age_limit)
         self.buckets = (sc.buckets if sc.buckets is not None
                         else default_buckets(cfg, sc.max_seq))
 
+        # resolve the span-based features against the stack's capability
+        if sc.prefill_chunk is None:
+            self.prefill_chunk = (KV.choose_prefill_chunk(
+                cfg, sc.max_seq, self.page_size) if attn_only else 0)
+        elif sc.prefill_chunk and attn_only:
+            # snap an explicit chunk to a whole number of pages
+            self.prefill_chunk = min(
+                sc.max_seq,
+                KV.num_blocks(sc.prefill_chunk, self.page_size)
+                * self.page_size)
+        else:
+            self.prefill_chunk = 0
+        self.spec = int(sc.spec_decode or 0) if attn_only else 0
+        if self.spec and sc.temperature > 0:
+            raise ValueError(
+                "spec_decode is greedy-only: draft acceptance compares "
+                "against the argmax chain, which sampling would break")
+
         b = sc.max_batch
-        self._block_tables = np.zeros((b, self.max_blocks), np.int32)
-        self._lengths = np.zeros(b, np.int32)      # cached tokens per slot
+        self._block_tables = jnp.zeros((b, self.max_blocks), jnp.int32)
+        self._lengths = jnp.zeros(b, jnp.int32)    # cached tokens per slot
         self._cur_tok = jnp.zeros(b, jnp.int32)
         self._out_buf = jnp.zeros((b, sc.max_seq), jnp.int32)
+        self._hist = jnp.zeros((b, sc.max_seq), jnp.int32)  # prompt+tokens
         self._rng = jax.random.PRNGKey(sc.seed)
         self._step_count = 0
         self._next_rid = 0
         self._joins: dict[int, Any] = {}           # bucket -> jitted join
+        self._chunk_fn: Any = None                 # jitted prefill chunk
         self._decode = jax.jit(self._decode_fn,
                                static_argnames=("chunk",))
+        self._decode_spec = jax.jit(self._decode_spec_fn,
+                                    static_argnames=("chunk",))
         self.last_step_tokens = 0                  # benchmark counter
+        self._spec_calls = 0                       # verify calls (stats)
+        self._spec_tokens = 0                      # tokens those emitted
 
     # -- request API ----------------------------------------------------------
 
@@ -205,32 +267,52 @@ class PagedEngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
+    def spec_stats(self) -> dict:
+        """Draft-verify counters: total verify calls, tokens they
+        emitted, and the mean accepted span (1.0 = plain decode)."""
+        calls = self._spec_calls
+        return {"verify_calls": calls, "tokens": self._spec_tokens,
+                "mean_accepted": self._spec_tokens / calls if calls else 0.0}
+
     def step(self) -> list[Request]:
         """One continuous-batching iteration; returns finished requests
         (with ``.output`` filled)."""
         self.last_step_tokens = 0
         for req in self.scheduler.admit():
-            self._join(req)
-            self.last_step_tokens += 1             # the prefill token
-        running = [r for r in self.scheduler.running.values()
-                   if not r.done]
-        if running:
-            self._decode_once(running)
+            row = np.full(self.max_blocks, KV.SCRATCH_PAGE, np.int32)
+            row[:len(req.pages)] = req.pages
+            self._block_tables = self._block_tables.at[req.slot].set(
+                jnp.asarray(row))
+            if (not self.prefill_chunk
+                    or req.prompt_len <= self.prefill_chunk):
+                # whole-prompt join: chunking a prompt that fits in ONE
+                # chunk would pay the fixed-span chunk call (span =
+                # prefill_chunk, padded) where the bucketed join prices
+                # the prefill at the prompt's own pow2 bucket — chunked
+                # prefill only earns its keep on multi-chunk prompts
+                self._join(req)
+                req.prefilled = req.prompt_len
+                self.last_step_tokens += 1         # the prefill token
+        plan = self.scheduler.plan_step(self.sc.decode_chunk,
+                                        self.prefill_chunk or 1)
+        # decode first: decode-ready slots are never stalled by prefill
+        if plan.decode_slots:
+            self._decode_once(
+                [self.scheduler.running[s] for s in plan.decode_slots])
+        for slot in plan.prefill_slots:
+            self._prefill_one_chunk(self.scheduler.running[slot])
         finished = []
         done_slots = [s for s, r in self.scheduler.running.items()
                       if r.done]
         if done_slots:
-            # copy-on-write (see _join): one fresh buffer per step
-            self._block_tables = self._block_tables.copy()
-            self._lengths = self._lengths.copy()
-        for slot in done_slots:
-            req = self.scheduler.running[slot]
-            # the single host transfer for this request's tokens
-            req.output = np.asarray(
-                self._out_buf[slot, :req.generated])
-            self._block_tables[slot] = KV.SCRATCH_PAGE
-            self._lengths[slot] = 0
-            finished.append(self.scheduler.evict(slot))
+            # one host transfer covers every request finishing this step;
+            # device state is NOT reset — the decode fns mask unoccupied
+            # slots to scratch, and admission rewrites the row anyway
+            host_out = np.asarray(self._out_buf)
+            for slot in done_slots:
+                req = self.scheduler.running[slot]
+                req.output = host_out[slot, :req.generated].copy()
+                finished.append(self.scheduler.evict(slot))
         return finished
 
     def generate(self, prompts, n_tokens: int) -> np.ndarray:
@@ -264,25 +346,17 @@ class PagedEngine:
         all in one jitted call per bucket length."""
         slot, L = req.slot, req.prompt_len
         bucket = self._bucket(L)
-        row = np.full(self.max_blocks, KV.SCRATCH_PAGE, np.int32)
-        row[:len(req.pages)] = req.pages
-        # copy-on-write: asynchronously dispatched device computations may
-        # hold zero-copy views of the old host arrays (CPU jax aliases
-        # numpy buffers) — never mutate them in place
-        self._block_tables = self._block_tables.copy()
-        self._block_tables[slot] = row
-        self._lengths = self._lengths.copy()
-        self._lengths[slot] = L
-
         prompt = np.zeros((1, bucket), np.int32)
         prompt[0, :L] = req.prompt
         nb = KV.num_blocks(bucket, self.page_size)
         pages = np.full(nb, KV.SCRATCH_PAGE, np.int32)
         pages[:min(nb, len(req.pages))] = req.pages[:nb]
-        self.cache, self._cur_tok, self._out_buf = self._get_join(bucket)(
+        (self.cache, self._lengths, self._cur_tok, self._out_buf,
+         self._hist) = self._get_join(bucket)(
             self.params, self.cache, jnp.asarray(prompt),
             jnp.int32(L), jnp.int32(slot), jnp.asarray(pages),
-            self._cur_tok, self._out_buf, self._next_key())
+            self._lengths, self._cur_tok, self._out_buf, self._hist,
+            self._next_key())
         req.generated = 1
 
     def _get_join(self, bucket: int):
@@ -290,7 +364,7 @@ class PagedEngine:
             cfg, sc = self.cfg, self.sc
 
             def join(params, cache, prompt, true_len, slot, pages,
-                     cur_tok, out_buf, key):
+                     lengths, cur_tok, out_buf, hist, key):
                 with ops.fused_ops(sc.fuse):
                     logits, dense = T.prefill(cfg, params, prompt,
                                               max_seq=bucket, full_kv=True,
@@ -298,11 +372,87 @@ class PagedEngine:
                 cache = KV.write_prefill(cfg, cache, dense, slot, pages,
                                          self.page_size)
                 tok = sample_tokens(cfg, logits, sc.temperature, key)[0]
-                return (cache, cur_tok.at[slot].set(tok),
-                        out_buf.at[slot, 0].set(tok))
+                hist = jax.lax.dynamic_update_slice(
+                    hist, prompt, (slot, jnp.int32(0)))
+                hist = hist.at[slot, true_len].set(tok, mode="drop")
+                return (cache, lengths.at[slot].set(true_len),
+                        cur_tok.at[slot].set(tok),
+                        out_buf.at[slot, 0].set(tok), hist)
 
             self._joins[bucket] = jax.jit(join)
         return self._joins[bucket]
+
+    # -- chunked prefill ------------------------------------------------------
+
+    def _prefill_one_chunk(self, req: Request) -> None:
+        """Advance one request's prefill by one chunk.
+
+        The chunk runs as a batch-1 multi-token ``decode_step`` over the
+        paged cache (``make_paged_span_step``): K/V for all chunk
+        positions scatter into the reserved pages and one q-span
+        flash-decode call attends each position to everything before it
+        — identical math to whole-prompt prefill, paid ``prefill_chunk``
+        tokens at a time.  The final chunk samples the first token
+        exactly as a join would.
+        """
+        C = self.prefill_chunk
+        start, L = req.prefilled, req.prompt_len
+        c_real = min(C, L - start)
+        final = start + c_real >= L
+        tokens = np.zeros((1, C), np.int32)
+        tokens[0, :c_real] = req.prompt[start:start + c_real]
+        take_at = (L - 1 - start) if final else -1
+        (self.cache, self._lengths, self._cur_tok, self._out_buf,
+         self._hist) = self._get_chunk_fn()(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.int32(start), self._block_tables,
+            self._lengths, jnp.int32(req.slot),
+            jnp.int32(start + c_real), jnp.int32(take_at),
+            self._cur_tok, self._out_buf, self._hist, self._next_key())
+        req.prefilled = start + c_real
+        if final:
+            req.generated = 1
+            self.last_step_tokens += 1             # the prefill token
+
+    def _get_chunk_fn(self):
+        if self._chunk_fn is None:
+            cfg, sc = self.cfg, self.sc
+            C = self.prefill_chunk
+
+            def chunk(params, cache, tokens, start, block_tables, lengths,
+                      slot, new_len, take_at, cur_tok, out_buf, hist, key):
+                bt_row = jax.lax.dynamic_slice_in_dim(block_tables,
+                                                      slot, 1)
+                with ops.fused_ops(sc.fuse):
+                    attn = KV.make_paged_span_step(
+                        cfg, bt_row, self.page_size, sc.max_seq,
+                        sc.use_kernel, sc.interpret)
+                    logits, cache = T.decode_step(
+                        cfg, params, tokens, cache,
+                        jnp.full((1,), start, jnp.int32), attn_step=attn)
+                lengths = lengths.at[slot].set(new_len)
+                idx = start + jnp.arange(C)
+                hist = hist.at[slot, jnp.where(idx < sc.max_seq, idx,
+                                               sc.max_seq)].set(
+                    tokens[0], mode="drop")
+                # final chunk: the prompt's last logits seed generation
+                tok = sample_tokens(cfg,
+                                    logits[:, jnp.clip(take_at, 0, C - 1)],
+                                    sc.temperature, key)[0]
+                is_final = take_at >= 0
+                cur_tok = cur_tok.at[slot].set(
+                    jnp.where(is_final, tok, cur_tok[slot]))
+                out_buf = out_buf.at[slot, 0].set(
+                    jnp.where(is_final, tok, out_buf[slot, 0]))
+                hist = hist.at[slot, new_len].set(
+                    jnp.where(is_final, tok, hist[slot, new_len]),
+                    mode="drop")
+                return cache, lengths, cur_tok, out_buf, hist
+
+            self._chunk_fn = jax.jit(chunk)
+        return self._chunk_fn
+
+    # -- decode ---------------------------------------------------------------
 
     def _decode_fn(self, params, cache, cur_tok, block_tables, lengths,
                    occupied, remaining, out_idx, out_buf, key, *,
@@ -312,9 +462,15 @@ class PagedEngine:
         ``remaining[b]`` is the slot's token budget at chunk start; step
         ``i`` is active for slot b iff ``occupied[b] and i <
         remaining[b]``.  Inactive slots freeze their length, token and
-        output row (their masked pool writes land in their own reserved
-        pages or the scratch page — never in another request's)."""
+        output row, and their block-table rows / lengths are masked to
+        scratch/0 *here, inside the jit* — so eviction never has to
+        reset device state (a stale row is harmless) and freeing a
+        request costs zero device dispatches."""
         cfg = self.cfg
+        lengths_in = lengths
+        block_tables = jnp.where(occupied[:, None], block_tables,
+                                 KV.SCRATCH_PAGE)
+        lengths = jnp.where(occupied, lengths, 0)
         attn = KV.make_paged_attn_step(cfg, block_tables, self.page_size,
                                        self.sc.use_kernel,
                                        self.sc.interpret,
@@ -337,10 +493,99 @@ class PagedEngine:
             return (tok, cache, lengths, out_idx, out_buf), None
 
         with ops.fused_ops(self.sc.fuse):
-            (cur_tok, cache, _, _, out_buf), _ = jax.lax.scan(
+            (cur_tok, cache, lengths, _, out_buf), _ = jax.lax.scan(
                 body, (cur_tok, cache, lengths, out_idx, out_buf),
                 jnp.arange(chunk))
-        return cur_tok, cache, out_buf
+        # restore masked-out lengths (a still-prefilling slot keeps its)
+        return (cur_tok, cache,
+                jnp.where(occupied, lengths, lengths_in), out_buf)
+
+    def _decode_spec_fn(self, params, cache, cur_tok, block_tables,
+                        lengths, occupied, remaining, out_idx, out_buf,
+                        hist, *, chunk: int):
+        """``chunk`` draft-verify steps (one device dispatch).
+
+        Each step drafts ``k = spec_decode`` tokens by n-gram lookup
+        over the slot's own history (prompt-lookup decoding: the latest
+        earlier occurrence of the trailing 2-gram proposes its
+        continuation; no match drafts -1, which can never be accepted),
+        scores current + drafts in ONE span decode_step, and accepts the
+        longest prefix matching the greedy argmax chain — so emitted
+        tokens are bit-identical to plain greedy decode, just cheaper
+        per token.  Draft rows past the accepted prefix leave garbage
+        K/V above the new length; the next span overwrites every such
+        position before the length mask can expose it.
+
+        ``remaining`` bounds *emitted tokens*, not steps; a step that
+        would overshoot the budget truncates its accepted span.  Returns
+        per-slot emitted counts and the active-call total for the
+        acceptance stats.
+        """
+        cfg = self.cfg
+        k = self.spec
+        span = k + 1
+        max_seq = self.sc.max_seq
+        b = cur_tok.shape[0]
+        rows = jnp.arange(b)
+        # inactive slots (free, evicted-stale, or still prefilling) are
+        # masked to scratch here so eviction never resets device state
+        lengths_in = lengths
+        block_tables = jnp.where(occupied[:, None], block_tables,
+                                 KV.SCRATCH_PAGE)
+        lengths = jnp.where(occupied, lengths, 0)
+        attn = KV.make_paged_span_step(cfg, block_tables, self.page_size,
+                                       max_seq, self.sc.use_kernel,
+                                       self.sc.interpret)
+
+        def drafts_for(hist, lengths):
+            hl = lengths + 1                     # tokens in hist per slot
+            last = hist[rows, jnp.clip(hl - 1, 0, max_seq - 1)]
+            prev = hist[rows, jnp.clip(hl - 2, 0, max_seq - 1)]
+            m2 = ((hist[:, 1:] == last[:, None])
+                  & (hist[:, :-1] == prev[:, None]))
+            p = jnp.arange(1, max_seq)
+            m2 &= p[None, :] < (hl - 1)[:, None]     # strictly earlier
+            j = jnp.max(jnp.where(m2, p[None, :], -1), axis=1)
+            gidx = j[:, None] + 1 + jnp.arange(k)[None, :]
+            valid = (j >= 0)[:, None] & (gidx < hl[:, None])
+            d = hist[rows[:, None], jnp.clip(gidx, 0, max_seq - 1)]
+            return jnp.where(valid, d, -1)
+
+        def body(carry, i):
+            (cur_tok, cache, lengths, out_idx, out_buf, hist, emitted,
+             calls) = carry
+            active = occupied & (emitted < remaining)
+            d = drafts_for(hist, lengths)
+            feed = jnp.concatenate(
+                [cur_tok[:, None], jnp.maximum(d, 0)], axis=1)
+            logits, cache = T.decode_step(cfg, params, feed, cache,
+                                          lengths, attn_step=attn)
+            a = jnp.argmax(logits[..., :cfg.vocab],
+                           axis=-1).astype(jnp.int32)         # (B, span)
+            prefix = jnp.cumprod((d == a[:, :k]).astype(jnp.int32), axis=1)
+            m = jnp.sum(prefix, axis=1)          # accepted drafts in [0, k]
+            n_emit = jnp.where(active,
+                               jnp.minimum(m + 1, remaining - emitted), 0)
+            t = jnp.arange(span)
+            take = t[None, :] < n_emit[:, None]
+            oidx = jnp.where(take, out_idx[:, None] + t[None, :], max_seq)
+            out_buf = out_buf.at[rows[:, None], oidx].set(a, mode="drop")
+            hidx = jnp.where(take, (lengths + 1)[:, None] + t[None, :],
+                             max_seq)
+            hist = hist.at[rows[:, None], hidx].set(a, mode="drop")
+            new_cur = a[rows, jnp.clip(n_emit - 1, 0, k)]
+            cur_tok = jnp.where(active, new_cur, cur_tok)
+            return (cur_tok, cache, lengths + n_emit, out_idx + n_emit,
+                    out_buf, hist, emitted + n_emit,
+                    calls + jnp.sum(active.astype(jnp.int32))), None
+
+        with ops.fused_ops(self.sc.fuse):
+            carry = (cur_tok, cache, lengths, out_idx, out_buf, hist,
+                     jnp.zeros(b, jnp.int32), jnp.int32(0))
+            (cur_tok, cache, lengths, _, out_buf, hist, emitted,
+             calls), _ = jax.lax.scan(body, carry, jnp.arange(chunk))
+        return (cur_tok, cache, jnp.where(occupied, lengths, lengths_in),
+                out_buf, hist, emitted, calls)
 
     def _decode_once(self, running: list[Request]) -> None:
         occupied = np.zeros(self.sc.max_batch, bool)
@@ -356,17 +601,34 @@ class PagedEngine:
         # over-length steps result-invariant)
         chunk = 1 << (int(remaining.max()) - 1).bit_length()
         chunk = int(min(self.sc.decode_chunk, chunk))
-        self._cur_tok, self.cache, self._out_buf = self._decode(
-            self.params, self.cache, self._cur_tok,
-            jnp.asarray(self._block_tables), jnp.asarray(self._lengths),
-            jnp.asarray(occupied), jnp.asarray(remaining),
+        if self.spec:
+            # each verify call emits 1..spec+1 tokens; size the scan for
+            # the token budget at full acceptance — zero acceptance just
+            # spreads a slot's budget over more scheduler visits instead
+            # of burning idle full-span model calls here
+            iters = -(-chunk // (self.spec + 1))
+            (self._cur_tok, self.cache, self._lengths, self._out_buf,
+             self._hist, emitted, calls) = self._decode_spec(
+                self.params, self.cache, self._cur_tok,
+                self._block_tables, self._lengths, jnp.asarray(occupied),
+                jnp.asarray(remaining), jnp.asarray(out_idx),
+                self._out_buf, self._hist, chunk=iters)
+            # the one per-step readback: how far each slot actually got
+            emitted = np.asarray(emitted)
+            for r in running:
+                n = int(emitted[r.slot])
+                r.generated += n
+                self.last_step_tokens += n
+            self._spec_calls += int(calls)
+            self._spec_tokens += int(emitted.sum())
+            return
+        (self._cur_tok, self.cache, self._lengths,
+         self._out_buf) = self._decode(
+            self.params, self.cache, self._cur_tok, self._block_tables,
+            self._lengths, jnp.asarray(occupied), jnp.asarray(remaining),
             jnp.asarray(out_idx), self._out_buf, self._next_key(),
             chunk=chunk)
-        # copy-on-write (see _join): the chunk just dispatched may hold a
-        # zero-copy view of the old _lengths buffer; replace, don't mutate
-        self._lengths = self._lengths.copy()
         for r in running:
             steps = min(chunk, r.max_new_tokens - r.generated)
             r.generated += steps
-            self._lengths[r.slot] += steps
             self.last_step_tokens += steps

@@ -81,6 +81,35 @@ def num_blocks(length: int, page_size: int) -> int:
     return -(-length // page_size)
 
 
+def choose_prefill_chunk(cfg: ModelConfig, max_seq: int,
+                         page_size: int) -> int:
+    """Prefill chunk size from the same blocking model as the page size.
+
+    A prefill chunk is processed as one multi-position q block of the
+    flash-decode kernel (``q_span = chunk``), so its VMEM cost is priced
+    by the kernel's own footprint model: the chunk is the largest
+    power-of-two multiple of the page size (a whole number of pages, so
+    chunk boundaries and page boundaries never disagree) whose q/score/
+    accumulator rows still fit the VMEM budget the page size was tuned
+    under, capped at ``max_seq``.  Growing the chunk amortizes the
+    per-chunk KV stream over more query rows — the same
+    arithmetic-intensity argument the paper makes for output blocking —
+    until the row-proportional buffers hit the budget.
+    """
+    from repro.core.tpu_adapter import default_vmem_budget
+    from repro.kernels.flash_decode import vmem_bytes_required
+    g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    kv_bytes = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype).itemsize
+    act_bytes = jnp.dtype(cfg.dtype).itemsize
+    budget = default_vmem_budget()
+    chunk = min(page_size, max_seq)
+    while chunk * 2 <= max_seq and vmem_bytes_required(
+            page_size, g, cfg.head_dim, act_bytes, kv_bytes=kv_bytes,
+            q_span=chunk * 2) <= budget:
+        chunk *= 2
+    return chunk
+
+
 # ------------------------------ device side --------------------------------
 
 
@@ -230,6 +259,61 @@ def make_paged_attn_step(cfg: ModelConfig, block_tables: jax.Array,
                                   use_kernel=use_kernel,
                                   interpret=interpret)
         out = out.reshape(b, 1, hq * hd).astype(hn.dtype)
+        # ops.linear: wo may be a QuantizedTensor (quantized serving)
+        return ops.linear(out, p["wo"]), {"k_pages": kp, "v_pages": vp}
+
+    return attn_step
+
+
+def make_paged_span_step(cfg: ModelConfig, block_tables: jax.Array,
+                         page_size: int, max_seq: int,
+                         use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """The span-capable ``attn_step`` for multi-token
+    ``transformer.decode_step`` — one definition behind both chunked
+    prefill and speculative verify.
+
+    ``hn`` is (B, S, D): S consecutive tokens starting at position
+    ``pos[b]`` (= the cached length).  All S positions' K/V are
+    scattered into the request's pages first, then ONE
+    ``ops.paged_attention`` call with a (B, S, Hq, D) q block scores
+    every position under its own causal mask — the kernel streams each
+    KV page once for all S rows.  Positions at or past ``max_seq`` (the
+    padded tail of a final prefill chunk, or draft rows past the token
+    budget) scatter harmlessly into the scratch page; positions inside
+    ``max_seq`` but past the span's accepted prefix are overwritten by
+    the next span before the length mask ever exposes them.
+
+    The fused oproj kernel is single-token (its output block is one
+    (1, E) row), so spans always use the unfused attention + ``linear``
+    pair; under ``fuse`` the QKV projection and the FFN still fuse.
+    """
+    from repro.kernels import ops
+
+    def attn_step(p: dict, hn: jax.Array, cache: dict, pos: jax.Array,
+                  window: int | None):
+        b, s, _ = hn.shape
+        hq, hd = cfg.n_heads, cfg.head_dim
+        positions = pos[:, None] + jnp.arange(s, dtype=pos.dtype)[None, :]
+        q, k, v = L.qkv_span_proj(cfg, p, hn, positions)
+
+        rows = jnp.arange(b)[:, None]
+        nb = block_tables.shape[1]
+        safe = positions < max_seq
+        blk = jnp.minimum(positions // page_size, nb - 1)
+        page_idx = jnp.where(safe, block_tables[rows, blk], SCRATCH_PAGE)
+        slot_idx = jnp.where(safe, positions % page_size, 0)
+        kp = cache["k_pages"].at[page_idx, slot_idx].set(
+            k.astype(cache["k_pages"].dtype))
+        vp = cache["v_pages"].at[page_idx, slot_idx].set(
+            v.astype(cache["v_pages"].dtype))
+
+        out = ops.paged_attention(q, kp, vp, block_tables, pos + 1,
+                                  window=window,
+                                  logit_cap=cfg.attn_logit_cap,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)   # (B, S, Hq, hd)
+        out = out.reshape(b, s, hq * hd).astype(hn.dtype)
         # ops.linear: wo may be a QuantizedTensor (quantized serving)
         return ops.linear(out, p["wo"]), {"k_pages": kp, "v_pages": vp}
 

@@ -1,14 +1,36 @@
-"""Continuous-batching scheduler: admission by free-page budget.
+"""Decode-priority continuous-batching scheduler.
 
 Policy layer of the serving subsystem (layout lives in ``kv_cache``,
-model math in ``engine``).  Requests wait in FIFO order; one is admitted
-when (a) a batch slot is free and (b) the page pool can cover its whole
-lifetime — ``ceil((prompt_len + max_new_tokens) / page_size)`` pages are
-reserved up front, so a running request can never stall mid-decode
-waiting for a page (no admission deadlock, at the cost of tail-page
-slack).  Finished requests are evicted at the step boundary, their pages
-return to the pool, and the freed slot joins the next admission round —
-the "per-step join of new prefills into the running decode batch".
+model math in ``engine``).  Two decisions live here, both pure host-side
+bookkeeping so the hypothesis suite (``tests/test_serve_invariants.py``)
+can drive them with random traces:
+
+**Admission** (:meth:`Scheduler.admit`) is backfill-with-aging.  A
+request is admitted when (a) a batch slot is free and (b) the page pool
+can cover its whole lifetime — ``ceil((prompt_len + max_new_tokens) /
+page_size)`` pages are reserved up front, so a running request can never
+stall mid-decode waiting for a page (no admission deadlock, at the cost
+of tail-page slack).  Unlike the original strict-FIFO rule, a younger
+request that fits may be admitted past a head that doesn't
+(head-of-line backfill keeps slots busy) — bounded by an anti-starvation
+aging rule: every admission round a waiting request stays queued
+increments its ``age``, and once the head's age reaches ``age_limit``
+admission becomes head-only until the head gets in.  Because running
+requests have bounded token budgets and whole-lifetime reservations,
+their pages always return, so a starving head is eventually admitted —
+the property the invariant suite checks.
+
+**Step planning** (:meth:`Scheduler.plan_step`) is decode-priority:
+every decode-ready slot decodes every step (a decode-ready slot is never
+skipped in favor of prefill — the no-starvation invariant), and prefill
+chunks backfill the remaining per-step token budget
+(``max_batch * decode_chunk`` tokens), round-robin across prefilling
+slots so one long prompt cannot monopolize the backfill.  At least one
+chunk runs whenever any slot is prefilling, so prefill always makes
+progress even at full decode load.
+
+Finished requests are evicted at the step boundary, their pages return
+to the pool, and the freed slot joins the next admission round.
 """
 
 from __future__ import annotations
@@ -30,7 +52,9 @@ class Request:
     max_new_tokens: int
     pages: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    prefilled: int = 0              # prompt tokens already in the KV cache
     generated: int = 0              # tokens sampled so far
+    age: int = 0                    # admission rounds spent waiting
     output: np.ndarray | None = None   # set at eviction
 
     @property
@@ -42,22 +66,48 @@ class Request:
         return self.prompt_len + self.max_new_tokens
 
     @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= self.prompt_len
+
+    @property
     def done(self) -> bool:
         return self.generated >= self.max_new_tokens
 
+    @property
+    def decode_ready(self) -> bool:
+        """Admitted, fully prefilled, budget left — decodes this step."""
+        return self.slot >= 0 and self.prefill_done and not self.done
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One step's work, in execution order: decode first, then chunks.
+
+    ``prefill_slots`` may name a slot more than once (several chunks of
+    the same prompt in one otherwise-idle step); the engine executes
+    them in order.
+    """
+
+    decode_slots: list[int]
+    prefill_slots: list[int]
+
 
 class Scheduler:
-    """FIFO continuous batching over ``max_batch`` slots and a page pool."""
+    """Decode-priority continuous batching over ``max_batch`` slots and
+    a refcounted page pool."""
 
     def __init__(self, max_batch: int, page_size: int,
-                 allocator: PageAllocator, max_seq: int):
+                 allocator: PageAllocator, max_seq: int,
+                 age_limit: int = 8):
         self.max_batch = max_batch
         self.page_size = page_size
         self.allocator = allocator
         self.max_seq = max_seq
+        self.age_limit = age_limit
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}          # slot -> Request
         self._free_slots = list(range(max_batch - 1, -1, -1))
+        self._rr = 0                                   # backfill round-robin
 
     # -- queue ----------------------------------------------------------------
 
@@ -82,20 +132,35 @@ class Scheduler:
 
     # -- admission / eviction -------------------------------------------------
 
+    def _admit_one(self, req: Request) -> Request:
+        self.waiting.remove(req)
+        req.slot = self._free_slots.pop()
+        req.pages = self.allocator.alloc_many(self.pages_needed(req))
+        self.running[req.slot] = req
+        return req
+
     def admit(self) -> list[Request]:
-        """Admit FIFO head requests while a slot and the page budget
-        allow; each admitted request leaves with its slot and its whole
-        page reservation (block table order = logical block order)."""
+        """One admission round: backfill past a head that doesn't fit,
+        unless the head is starving (``age >= age_limit``), in which
+        case admission is head-only until it gets in.  Each admitted
+        request leaves with its slot and its whole page reservation
+        (block table order = logical block order)."""
         admitted = []
         while self.waiting and self._free_slots:
-            req = self.waiting[0]
-            if self.allocator.available() < self.pages_needed(req):
-                break                    # strict FIFO: no head-of-line skip
-            self.waiting.popleft()
-            req.slot = self._free_slots.pop()
-            req.pages = self.allocator.alloc_many(self.pages_needed(req))
-            self.running[req.slot] = req
-            admitted.append(req)
+            head = self.waiting[0]
+            if self.allocator.available() >= self.pages_needed(head):
+                admitted.append(self._admit_one(head))
+                continue
+            if head.age >= self.age_limit:
+                break           # starving head blocks younger admissions
+            for req in list(self.waiting)[1:]:
+                if self.allocator.available() >= self.pages_needed(req):
+                    admitted.append(self._admit_one(req))
+                    break
+            else:
+                break           # nobody fits
+        for req in self.waiting:
+            req.age += 1
         return admitted
 
     def evict(self, slot: int) -> Request:
@@ -106,3 +171,39 @@ class Scheduler:
         req.slot = -1
         self._free_slots.append(slot)
         return req
+
+    # -- step planning --------------------------------------------------------
+
+    def plan_step(self, decode_chunk: int, prefill_chunk: int) -> StepPlan:
+        """Decode-priority plan for one engine step.
+
+        Every decode-ready slot is in ``decode_slots`` — unconditionally,
+        which is the whole no-starvation guarantee.  Prefill chunks then
+        backfill the leftover of a ``max_batch * decode_chunk`` token
+        budget (minimum one chunk whenever anything is prefilling, so
+        prefill progresses even at full decode load), assigned
+        round-robin over the prefilling slots.
+        """
+        decode_slots = sorted(
+            s for s, r in self.running.items() if r.decode_ready)
+        prefilling = sorted(
+            s for s, r in self.running.items() if not r.prefill_done)
+        if not prefilling:
+            return StepPlan(decode_slots, [])
+        budget = self.max_batch * decode_chunk
+        budget -= len(decode_slots) * decode_chunk
+        n_chunks = max(1, budget // max(prefill_chunk, 1))
+        remaining = {
+            s: num_blocks(self.running[s].prompt_len
+                          - self.running[s].prefilled, prefill_chunk)
+            for s in prefilling}
+        chosen: list[int] = []
+        i = self._rr
+        while len(chosen) < n_chunks and any(remaining.values()):
+            s = prefilling[i % len(prefilling)]
+            i += 1
+            if remaining[s] > 0:
+                chosen.append(s)
+                remaining[s] -= 1
+        self._rr = i % len(prefilling)
+        return StepPlan(decode_slots, chosen)

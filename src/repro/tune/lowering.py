@@ -87,6 +87,9 @@ def fits_vmem(spec: OpSpec, tiles: tuple[int, ...], budget: int) -> bool:
         bm, bk, bn = tiles
         return vmem_bytes_required(bm, bk, bn, spec.itemsize) <= budget
     if spec.op in ATTN_OPS:
+        # priced at q_span=1 (single-position decode); chunked prefill
+        # re-prices the winning block with its span via
+        # serve.kv_cache.choose_prefill_chunk
         from repro.kernels.flash_decode import vmem_bytes_required
         G, _, D = spec.dims
         (bkv,) = tiles

@@ -26,7 +26,12 @@ Serving adds one more memory-bound nest:
   paged KV cache of head dim D.  The single tile is ``(block_kv,)``:
   the KV block of the flash-decode kernel AND the page size of the
   paged cache (``serve/kv_cache.py``), so the analytical model fixes
-  both at once.
+  both at once.  The same key also prices the *chunked-prefill span*:
+  the kernel's VMEM model takes a ``q_span`` multiplier (q/output tiles
+  scale with the span, the streamed KV block does not), and
+  ``serve.kv_cache.choose_prefill_chunk`` grows the span in whole
+  pages until the model says the q block stops fitting — page size and
+  chunk size are two reads of one schedule.
 
 Quantization adds dtype-aware variants of the two serving-critical
 nests (docs/quantization.md).  Their SHAPE dims match the wide ops, but

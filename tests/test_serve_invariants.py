@@ -1,0 +1,350 @@
+"""Serving invariants: decode-priority scheduler properties and
+token-exactness of chunked prefill / speculative decode.
+
+Two layers:
+
+* **Scheduler properties** — a pure host-side simulation drives
+  ``Scheduler.admit``/``plan_step``/``evict`` with random traces (no
+  model, no device) and asserts the contracts the engine relies on:
+  no page leaks, no decode starvation, no double-admission, and that
+  aging eventually admits every queued request.  The hypothesis
+  versions explore random traces (derandomized in CI via the conftest
+  profile); deterministic twins keep the same assertions exercised on
+  minimal installs where hypothesis is absent.
+
+* **Token exactness** — chunked prefill and draft-verify speculative
+  decode must be *byte-identical* to the whole-prompt-join greedy paged
+  engine across the architecture families, including the fused and
+  quantized compositions.  Chunking and speculation change scheduling
+  and cost, never tokens.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serve import kv_cache as KV
+from repro.serve.engine import PagedEngine, PagedServeConfig
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _cfg(arch: str):
+    return dataclasses.replace(get_reduced(arch), dtype=jnp.float32)
+
+
+# ===================== scheduler simulation harness =========================
+
+
+class _Sim:
+    """Drives a Scheduler the way the engine does — admit, plan, advance
+    prefill/decode by the planned amounts, evict — while checking every
+    step-level invariant.  Pure bookkeeping: no model runs."""
+
+    def __init__(self, max_batch, page_size, n_pages, max_seq,
+                 decode_chunk=4, prefill_chunk=4, age_limit=4):
+        self.alloc = KV.PageAllocator(n_pages)
+        self.sched = Scheduler(max_batch, page_size, self.alloc, max_seq,
+                               age_limit=age_limit)
+        self.decode_chunk = decode_chunk
+        self.prefill_chunk = prefill_chunk
+        self.admitted_rids: list[int] = []
+        self.finished_rids: list[int] = []
+
+    def submit(self, rid, prompt_len, max_new):
+        self.sched.submit(
+            Request(rid, np.zeros(prompt_len, np.int32), max_new))
+
+    def step(self):
+        for req in self.sched.admit():
+            assert req.slot >= 0
+            assert len(req.pages) == self.sched.pages_needed(req)
+            # no double-admission: an admitted rid never reappears
+            assert req.rid not in self.admitted_rids, "double admission"
+            self.admitted_rids.append(req.rid)
+        plan = self.sched.plan_step(self.decode_chunk, self.prefill_chunk)
+        # no decode starvation: every decode-ready slot decodes NOW
+        ready = {s for s, r in self.sched.running.items()
+                 if r.decode_ready}
+        assert set(plan.decode_slots) == ready, "decode-ready slot skipped"
+        # prefill chunks only target admitted, unfinished-prefill slots
+        for s in plan.prefill_slots:
+            assert not self.sched.running[s].prefill_done
+        if any(not r.prefill_done for r in self.sched.running.values()):
+            assert plan.prefill_slots, "prefill starved at full load"
+        # advance the simulated engine
+        for s in plan.decode_slots:
+            r = self.sched.running[s]
+            r.generated += min(self.decode_chunk,
+                               r.max_new_tokens - r.generated)
+        for s in plan.prefill_slots:
+            r = self.sched.running[s]
+            r.prefilled += min(self.prefill_chunk,
+                               r.prompt_len - r.prefilled)
+            if r.prefill_done and r.generated == 0:
+                r.generated = 1      # final chunk samples the first token
+        for s in [s for s, r in self.sched.running.items() if r.done]:
+            self.finished_rids.append(self.sched.evict(s).rid)
+        self.check_pages()
+
+    def check_pages(self):
+        owned = [p for r in self.sched.running.values() for p in r.pages]
+        assert len(owned) == len(set(owned)), "page double-owned"
+        assert KV.SCRATCH_PAGE not in owned, "scratch page owned"
+        assert self.alloc.in_use() == len(owned), "page leak"
+        assert len(self.sched.running) <= self.sched.max_batch
+
+    def drain(self, max_steps):
+        """Run to completion; liveness bound = the aging guarantee."""
+        steps = 0
+        while self.sched.has_work:
+            self.step()
+            steps += 1
+            assert steps <= max_steps, (
+                f"scheduler failed to drain in {max_steps} steps: "
+                f"waiting={[r.rid for r in self.sched.waiting]} "
+                f"running={sorted(self.sched.running)}")
+        assert self.alloc.available() == self.alloc.capacity, "leak at drain"
+
+
+def _random_trace(rng, n_requests=12, max_batch=3, page_size=4,
+                  n_pages=9, max_seq=24, **kw):
+    sim = _Sim(max_batch, page_size, n_pages, max_seq, **kw)
+    rid = 0
+    for _ in range(n_requests):
+        L = int(rng.integers(1, max_seq // 2 + 1))
+        n = int(rng.integers(1, max_seq - L + 1))
+        sim.submit(rid, L, n)
+        rid += 1
+        if rng.random() < 0.7:
+            sim.step()
+    sim.drain(max_steps=40 * n_requests)
+    # aging/liveness: every submitted request was admitted and finished
+    assert sorted(sim.finished_rids) == list(range(rid))
+    return sim
+
+
+# ------------------------- deterministic twins ------------------------------
+
+
+def test_scheduler_trace_deterministic():
+    """Random-trace properties under fixed seeds (runs everywhere, no
+    hypothesis needed): leaks, starvation, double admission, liveness."""
+    for seed in range(8):
+        _random_trace(np.random.default_rng(seed))
+
+
+def test_decode_priority_under_prefill_pressure():
+    """A decode-ready slot keeps decoding every step while a long prompt
+    chunk-prefills beside it."""
+    sim = _Sim(max_batch=2, page_size=4, n_pages=20, max_seq=40,
+               decode_chunk=2, prefill_chunk=4)
+    sim.submit(0, prompt_len=4, max_new=20)     # quick to prefill
+    sim.step()                                   # rid0 admitted + chunked
+    while not sim.sched.running[0].prefill_done:
+        sim.step()
+    sim.submit(1, prompt_len=20, max_new=4)     # long prefill arrives
+    gen_before = sim.sched.running[0].generated
+    for _ in range(3):
+        sim.step()
+        if 0 not in sim.sched.running:           # rid0 finished
+            break
+        gen = sim.sched.running[0].generated
+        assert gen > gen_before, "decode starved by prefill"
+        gen_before = gen
+    sim.drain(max_steps=100)
+
+
+def test_aging_admits_starving_head():
+    """A big request stuck behind page pressure is eventually admitted:
+    once its age passes the limit, backfill stops stealing its pages."""
+    sim = _Sim(max_batch=2, page_size=4, n_pages=9, max_seq=32,
+               decode_chunk=1, prefill_chunk=4, age_limit=3)
+    # 8 usable pages; the hog takes 6, the big head needs 8
+    sim.submit(0, prompt_len=8, max_new=16)      # 6 pages
+    sim.step()
+    sim.submit(1, prompt_len=16, max_new=16)     # 8 pages: must wait
+    small_done = 0
+    for rid in range(2, 10):                     # stream of small fillers
+        sim.submit(rid, prompt_len=2, max_new=2)  # 1 page each
+    sim.drain(max_steps=400)
+    assert sorted(sim.finished_rids) == list(range(10))
+    # the big request did not come last by luck: it beat some fillers
+    assert sim.finished_rids.index(1) < len(sim.finished_rids) - 1
+
+
+def test_backfill_admits_past_blocked_head():
+    """Head doesn't fit, a younger request does: the younger one is
+    admitted (throughput), the head stays queued (not dropped)."""
+    sim = _Sim(max_batch=2, page_size=4, n_pages=9, max_seq=32)
+    sim.submit(0, prompt_len=8, max_new=16)      # 6 of 8 pages
+    sim.step()
+    sim.submit(1, prompt_len=16, max_new=16)     # 8 pages: blocked
+    sim.submit(2, prompt_len=2, max_new=2)       # 1 page: fits
+    sim.step()
+    assert 1 in [r.rid for r in sim.sched.waiting]
+    assert 2 in sim.admitted_rids
+    sim.drain(max_steps=200)
+
+
+# --------------------------- hypothesis layer -------------------------------
+
+
+def test_scheduler_invariants_property():
+    """Hypothesis-driven random traces over the full admit/plan/advance/
+    evict cycle (CI runs this derandomized via the conftest profile)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def run(data):
+        page_size = data.draw(st.sampled_from([2, 4]))
+        n_pages = data.draw(st.integers(4, 12))
+        max_batch = data.draw(st.integers(1, 4))
+        max_seq = page_size * (n_pages - 1)
+        sim = _Sim(max_batch, page_size, n_pages, max_seq,
+                   decode_chunk=data.draw(st.integers(1, 4)),
+                   prefill_chunk=data.draw(st.sampled_from(
+                       [page_size, 2 * page_size])),
+                   age_limit=data.draw(st.integers(1, 4)))
+        rid = 0
+        for _ in range(data.draw(st.integers(1, 10))):
+            L = data.draw(st.integers(1, max(1, max_seq // 2)))
+            n = data.draw(st.integers(1, max_seq - L))
+            sim.submit(rid, L, n)
+            rid += 1
+            if data.draw(st.booleans()):
+                sim.step()
+        sim.drain(max_steps=60 * max(rid, 1))
+        assert sorted(sim.finished_rids) == list(range(rid))
+
+    run()
+
+
+# ===================== token exactness: chunk + spec ========================
+
+ARCHS = ["granite-3-8b", "gemma2-9b", "recurrentgemma-9b", "mamba2-780m"]
+
+
+def _prompts(cfg, seed=0, lens=(5, 11, 9)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (L,)).astype(np.int32)
+            for L in lens]
+
+
+def _generate(cfg, params, prompts, gen=8, **kw):
+    eng = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=64, max_batch=2, page_size=8, decode_chunk=4, **kw))
+    return eng.generate(prompts, gen), eng
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_prefill_token_exact(arch):
+    """Chunked prefill == whole-prompt joins, token for token (hybrid
+    stacks gate chunking off and must still agree, trivially)."""
+    cfg = _cfg(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    prompts = _prompts(cfg, seed=1)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=0)
+    out, eng = _generate(cfg, params, prompts, prefill_chunk=8)
+    np.testing.assert_array_equal(ref, out)
+    attn_only = all(p in ("global", "local") for p in cfg.layer_pattern)
+    assert (eng.prefill_chunk == 8) == attn_only    # hybrid gates off
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_speculative_decode_token_exact(arch):
+    """Draft-verify speculative decode == plain greedy decode, token for
+    token — acceptance compares against the argmax chain, so emitted
+    tokens cannot diverge (hybrid stacks gate speculation off)."""
+    cfg = _cfg(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    prompts = _prompts(cfg, seed=2)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=0,
+                       spec_decode=0)
+    out, eng = _generate(cfg, params, prompts, prefill_chunk=8,
+                         spec_decode=3)
+    np.testing.assert_array_equal(ref, out)
+    attn_only = all(p in ("global", "local") for p in cfg.layer_pattern)
+    assert (eng.spec == 3) == attn_only
+    if attn_only:
+        st = eng.spec_stats()
+        assert st["verify_calls"] > 0
+        assert st["tokens"] >= st["verify_calls"]   # >= 1 token per call
+
+
+def test_chunk_and_spec_token_exact_fused():
+    """--fuse composition: chunked + speculative fused engine ==
+    whole-prompt fused engine (the span path swaps the oproj-fused
+    attention for the unfused pair; QKV/MLP fusion still applies)."""
+    cfg = _cfg("gemma2-9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(3))
+    prompts = _prompts(cfg, seed=3)
+    ref, _ = _generate(cfg, params, prompts, fuse=True, prefill_chunk=0)
+    out, _ = _generate(cfg, params, prompts, fuse=True, prefill_chunk=8,
+                       spec_decode=2)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_chunk_and_spec_token_exact_w8():
+    """--quantize w8 composition: int8 projection weights under chunked
+    prefill + speculative decode stay token-exact."""
+    from repro.quant import quantize_params
+    cfg = _cfg("granite-3-8b")
+    params = quantize_params(T.init_params(cfg, jax.random.PRNGKey(4)))
+    prompts = _prompts(cfg, seed=4)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=0)
+    out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
+                       spec_decode=2)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_chunk_and_spec_token_exact_fp8kv():
+    """--quantize fp8kv composition: chunked prefill and speculative
+    verify write/read the fp8 page pool exactly like plain decode."""
+    cfg = dataclasses.replace(_cfg("granite-3-8b"),
+                              kv_cache_dtype=jnp.float8_e4m3fn)
+    params = T.init_params(cfg, jax.random.PRNGKey(5))
+    prompts = _prompts(cfg, seed=5)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=0)
+    out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
+                       spec_decode=2)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """End-to-end scheduling shape: with one request decoding and one
+    chunk-prefilling, both make progress in the same engine step."""
+    cfg = _cfg("granite-3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(6))
+    rng = np.random.default_rng(6)
+    eng = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=64, max_batch=2, page_size=8, decode_chunk=2,
+        prefill_chunk=8))
+    eng.submit(rng.integers(0, cfg.vocab, (4,)).astype(np.int32), 16)
+    while not any(r.decode_ready for r in eng.scheduler.running.values()):
+        eng.step()
+    eng.submit(rng.integers(0, cfg.vocab, (24,)).astype(np.int32), 4)
+    eng.step()                                   # admits + first chunk
+    r0 = next(r for r in eng.scheduler.running.values() if r.rid == 0)
+    r1 = next(r for r in eng.scheduler.running.values() if r.rid == 1)
+    g0 = r0.generated
+    assert 0 < r1.prefilled < r1.prompt_len      # chunking, not a join
+    eng.step()
+    assert r0.generated > g0                     # decode kept moving
+    assert r1.prefilled > 8                      # prefill kept moving
+    while eng.has_work:
+        eng.step()
+
+
+def test_spec_decode_rejects_sampling():
+    cfg = _cfg("granite-3-8b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="greedy"):
+        PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=32, max_batch=1, temperature=0.5, spec_decode=2))
