@@ -14,6 +14,16 @@ stable:
   must stay within ``--tolerance`` (default 0.5: flag halvings, ignore
   jitter) of the committed speedup.
 
+The prefix-cache section (``serve_paged_prefix`` /
+``serve_paged_noshare``) runs a *different* workload than
+``serve_static``, so those records are excluded from the
+paged/static loop and guarded by their own pair ratio
+(prefix-vs-noshare) plus exact checks on the sharing counters:
+``admitted_tokens_saved`` is deterministic host-side accounting
+(exact match), and ``cache_hit_rate`` must stay positive and equal
+to the committed value within 0.001.  A committed file from before
+the prefix-cache schema migrates via ``--update``.
+
     # CI wiring (fresh run + guard):
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke --fuse \\
         --json BENCH_serve.ci.json
@@ -42,8 +52,13 @@ def _records(path: str) -> dict[str, dict]:
     return {r["name"]: r for r in doc["records"]}
 
 
-def _speedup(recs: dict[str, dict], name: str) -> float:
-    return recs[name]["tok_s"] / max(recs["serve_static"]["tok_s"], 1e-9)
+def _speedup(recs: dict[str, dict], name: str,
+             base: str = "serve_static") -> float:
+    return recs[name]["tok_s"] / max(recs[base]["tok_s"], 1e-9)
+
+
+# reuse-workload records: not comparable to the serve_static baseline
+PREFIX_SECTION = ("serve_paged_prefix", "serve_paged_noshare")
 
 
 def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
@@ -68,7 +83,8 @@ def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
             if field not in got:
                 failures.append(f"{name}: field {field!r} missing")
     for name in committed:
-        if name == "serve_static" or name not in fresh:
+        if name == "serve_static" or name in PREFIX_SECTION \
+                or name not in fresh:
             continue
         ref_x = _speedup(committed, name)
         got_x = _speedup(fresh, name)
@@ -81,6 +97,40 @@ def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
                 f"{name}: paged/static speedup {got_x:.2f}x fell below "
                 f"{floor:.2f}x ({(1 - tolerance):.0%} of the committed "
                 f"{ref_x:.2f}x)")
+
+    # prefix-cache section: pair ratio + exact sharing counters
+    if all(n in committed and n in fresh for n in PREFIX_SECTION):
+        ref_x = _speedup(committed, "serve_paged_prefix",
+                         base="serve_paged_noshare")
+        got_x = _speedup(fresh, "serve_paged_prefix",
+                         base="serve_paged_noshare")
+        floor = ref_x * (1.0 - tolerance)
+        status = "ok" if got_x >= floor else "REGRESSION"
+        print(f"serve_paged_prefix: vs-noshare {got_x:.2f}x vs committed "
+              f"{ref_x:.2f}x (floor {floor:.2f}x) {status}")
+        if got_x < floor:
+            failures.append(
+                f"serve_paged_prefix: sharing speedup {got_x:.2f}x fell "
+                f"below {floor:.2f}x of the committed {ref_x:.2f}x")
+        got = fresh["serve_paged_prefix"]
+        ref = committed["serve_paged_prefix"]
+        if got.get("admitted_tokens_saved") != \
+                ref.get("admitted_tokens_saved"):
+            failures.append(
+                f"serve_paged_prefix: admitted_tokens_saved "
+                f"{got.get('admitted_tokens_saved')} != committed "
+                f"{ref.get('admitted_tokens_saved')} — sharing "
+                f"admission changed semantics; rerun with --update "
+                f"if intentional")
+        hr = got.get("cache_hit_rate", 0.0)
+        if not hr > 0:
+            failures.append(
+                "serve_paged_prefix: cache_hit_rate is 0 — the reuse "
+                "workload never hit the cache")
+        if abs(hr - ref.get("cache_hit_rate", 0.0)) > 1e-3:
+            failures.append(
+                f"serve_paged_prefix: cache_hit_rate {hr} != committed "
+                f"{ref.get('cache_hit_rate')}")
 
     if failures:
         print("\nbenchmark regression guard FAILED:", file=sys.stderr)

@@ -17,6 +17,14 @@ Every run — ``--smoke`` included — uses a serving-scale reduced config
 a host dispatch and the comparison would measure dispatch counts, not
 scheduling.  ``--smoke`` only shrinks the *workload* to CI size.
 
+``--prefix-cache`` adds a *prompt-reuse* section on its own zipfian
+workload (a small pool of shared prefixes with zipf(1.2) popularity,
+unique ragged tails): the prefix-sharing paged engine against an
+otherwise-identical engine with sharing off, pinned to the same page
+size.  Its records carry ``cache_hit_rate`` and
+``admitted_tokens_saved`` — and are *not* comparable to the
+``serve_static`` baseline, which runs the mixed-length workload.
+
 Reports decode tokens/sec (useful tokens only) and p50/p95 per-token
 step latency.  CSV contract: ``name,us_per_call,derived``.
 
@@ -52,6 +60,36 @@ def make_workload(cfg, n_requests: int, prompt_len: int, gen: int,
     prompts = [rng.integers(0, cfg.vocab, (int(L),), dtype=np.int32)
                for L in lens]
     return prompts, [int(g) for g in gens]
+
+
+def make_reuse_workload(cfg, n_requests: int, prompt_len: int, gen: int,
+                        max_seq: int, seed: int = 1):
+    """Zipfian prompt-reuse workload for the prefix-cache section.
+
+    A small pool of shared prefixes (3/4 of ``prompt_len`` tokens) is
+    drawn once; each request picks a prefix with zipf(1.2) popularity —
+    a few prompts dominate, like templated system prompts do — and
+    appends a unique ragged tail (possibly empty, which exercises the
+    exact-full-match CoW fork).  Budgets are heavy-tailed like
+    :func:`make_workload`, capped so prompt + generation fits
+    ``max_seq``.
+    """
+    rng = np.random.default_rng(seed)
+    pre_len = max(1, (3 * prompt_len) // 4)
+    pool = [rng.integers(0, cfg.vocab, (pre_len,), dtype=np.int32)
+            for _ in range(8)]
+    ranks = np.minimum(rng.zipf(1.2, n_requests) - 1, len(pool) - 1)
+    short = rng.integers(2, max(3, gen // 8), n_requests)
+    long = rng.integers(max(2, gen // 2), gen + 1, n_requests)
+    gens = np.where(rng.random(n_requests) < 0.75, short, long)
+    prompts, capped = [], []
+    for r, g in zip(ranks, gens):
+        tail_len = int(rng.integers(0, prompt_len - pre_len + 1))
+        tail = rng.integers(0, cfg.vocab, (tail_len,), dtype=np.int32)
+        prompt = np.concatenate([pool[int(r)], tail])
+        prompts.append(prompt)
+        capped.append(int(max(2, min(int(g), max_seq - len(prompt)))))
+    return prompts, capped
 
 
 def run_static(engine, prompts, gens, max_batch: int):
@@ -95,10 +133,13 @@ def run_paged(engine, prompts, gens):
     return wall, useful, step_times
 
 
-def paged_fields(engine, spec_before=None):
-    """Per-engine configuration + speculative-decode acceptance stats
-    for the JSON record (delta against a pre-warmup snapshot so warmup
-    verify calls don't pollute the measured run)."""
+def paged_fields(engine, spec_before=None, prefix_before=None):
+    """Per-engine configuration + speculative-decode acceptance and
+    prefix-cache stats for the JSON record (deltas against pre-warmup
+    snapshots so warmup runs don't pollute the measured run).  Every
+    paged record carries ``cache_hit_rate`` / ``admitted_tokens_saved``
+    — zero for engines without prefix caching — so the trajectory file
+    stays one schema."""
     fields = {"page_size": int(engine.page_size),
               "prefill_chunk": int(engine.prefill_chunk),
               "spec_decode": int(engine.spec)}
@@ -110,6 +151,19 @@ def paged_fields(engine, spec_before=None):
         fields["spec_verify_calls"] = int(calls)
         fields["spec_mean_accepted"] = round(toks / calls, 3) if calls \
             else 0.0
+    fields["prefix_cache"] = bool(engine.prefix_caching)
+    if engine.prefix_caching:
+        st = engine.prefix_stats()
+        b = prefix_before or {}
+        lookups = st["lookups"] - b.get("lookups", 0)
+        hits = st["hits"] - b.get("hits", 0)
+        fields["cache_hit_rate"] = round(hits / lookups, 3) if lookups \
+            else 0.0
+        fields["admitted_tokens_saved"] = int(
+            st["tokens_saved"] - b.get("tokens_saved", 0))
+    else:
+        fields["cache_hit_rate"] = 0.0
+        fields["admitted_tokens_saved"] = 0
     return fields
 
 
@@ -128,6 +182,13 @@ def main() -> None:
                     help="also run the paged engine with cross-op "
                          "fused kernels (docs/fusion.md) and report a "
                          "fused-vs-unfused section")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="also run a zipfian prompt-reuse section: "
+                         "prefix-sharing paged engine vs an identical "
+                         "engine with sharing off (docs/serving.md)")
+    ap.add_argument("--reuse-hint", type=float, default=0.5,
+                    help="reuse rate fed to the share-vs-stream "
+                         "page-size pricing for the sharing engine")
     ap.add_argument("--spec", type=int, default=2,
                     help="draft tokens per speculative decode step for "
                          "the paged engine (0 -> off)")
@@ -223,6 +284,66 @@ def main() -> None:
              tok_s=round(f_tps, 2), p50_us=round(f50, 1),
              p95_us=round(f95, 1), useful_tokens=int(f_useful),
              **paged_fields(fused, fspec0))
+
+    if args.prefix_cache:
+        # prompt-reuse section: zipf-popular shared prefixes on a
+        # separate workload (NOT comparable to serve_static above).
+        # The sharing engine prices its page size under the reuse hint;
+        # the no-sharing engine is pinned to the SAME page size, so the
+        # delta is purely the sharing machinery — hit admissions skip
+        # the shared prefix's prefill and only stream the tail
+        # long prompts, short answers — the templated-system-prompt
+        # regime sharing targets; a miss pays a near-max_seq join, a
+        # hit streams only its ragged tail
+        r_plen = 3 * args.max_seq // 4
+        r_prompts, r_gens = make_reuse_workload(
+            cfg, args.requests, r_plen, args.gen, args.max_seq)
+        share = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=args.max_seq, max_batch=args.max_batch,
+            page_size=args.page_size or None, prefill_chunk=chunk,
+            spec_decode=args.spec, decode_chunk=args.decode_chunk,
+            prefix_cache=True, reuse_hint=args.reuse_hint))
+        noshare = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=args.max_seq, max_batch=args.max_batch,
+            page_size=share.page_size, prefill_chunk=chunk,
+            spec_decode=args.spec, decode_chunk=args.decode_chunk))
+        run_paged(noshare, r_prompts, r_gens)    # warm compiles
+        nspec0 = noshare.spec_stats() if noshare.spec else None
+        n_wall, n_useful, n_steps = run_paged(noshare, r_prompts, r_gens)
+        assert n_useful == sum(r_gens), (n_useful, sum(r_gens))
+        # the sharing engine's warmup also brings the radix tree to
+        # steady state — the measured run sees a warm cache, which is
+        # the regime prefix caching exists for; the second pass repeats
+        # the workload against the now-warm tree so every all-hit
+        # admission path (and its span-width compile) runs before the
+        # clock starts; stats are deltas
+        run_paged(share, r_prompts, r_gens)
+        run_paged(share, r_prompts, r_gens)
+        sspec0 = share.spec_stats() if share.spec else None
+        spfx0 = share.prefix_stats()
+        sh_wall, sh_useful, sh_steps = run_paged(share, r_prompts,
+                                                 r_gens)
+        assert sh_useful == sum(r_gens), (sh_useful, sum(r_gens))
+        n_tps = n_useful / n_wall
+        sh_tps = sh_useful / sh_wall
+        n50, n95 = np.percentile(np.asarray(n_steps) * 1e6, [50, 95])
+        h50, h95 = np.percentile(np.asarray(sh_steps) * 1e6, [50, 95])
+        emit("serve_paged_noshare", n_wall / max(n_useful, 1) * 1e6,
+             f"{n_tps:.1f} tok/s p50={n50:.0f}us p95={n95:.0f}us "
+             f"useful={n_useful} page={noshare.page_size} "
+             f"(reuse workload, sharing off)",
+             tok_s=round(n_tps, 2), p50_us=round(n50, 1),
+             p95_us=round(n95, 1), useful_tokens=int(n_useful),
+             **paged_fields(noshare, nspec0))
+        pf = paged_fields(share, sspec0, spfx0)
+        emit("serve_paged_prefix", sh_wall / max(sh_useful, 1) * 1e6,
+             f"{sh_tps:.1f} tok/s p50={h50:.0f}us p95={h95:.0f}us "
+             f"useful={sh_useful} page={share.page_size} "
+             f"hit={pf['cache_hit_rate']:.0%} "
+             f"saved={pf['admitted_tokens_saved']}tok "
+             f"vs-noshare={sh_tps / max(n_tps, 1e-9):.2f}x",
+             tok_s=round(sh_tps, 2), p50_us=round(h50, 1),
+             p95_us=round(h95, 1), useful_tokens=int(sh_useful), **pf)
 
     if args.json:
         write_json(args.json)

@@ -68,6 +68,15 @@ def main() -> None:
                     help="paged: draft tokens per speculative "
                          "draft-verify decode step (0 -> off; greedy "
                          "only, attention-only stacks)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged: radix-tree prefix sharing — repeated "
+                         "prompt prefixes reuse cached KV pages "
+                         "(copy-on-write; attention-only stacks; "
+                         "docs/serving.md)")
+    ap.add_argument("--reuse-hint", type=float, default=0.5,
+                    help="expected prompt-reuse rate for the "
+                         "share-vs-stream page-size pricing (only "
+                         "with --prefix-cache)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -91,7 +100,8 @@ def main() -> None:
             temperature=args.temperature, fuse=args.fuse,
             prefill_chunk=None if args.prefill_chunk < 0
             else args.prefill_chunk,
-            spec_decode=args.spec))
+            spec_decode=args.spec, prefix_cache=args.prefix_cache,
+            reuse_hint=args.reuse_hint))
         n_req = args.requests or args.batch
         lo = max(1, args.prompt_len // 2) if args.mixed_lens \
             else args.prompt_len
@@ -111,6 +121,12 @@ def main() -> None:
             print(f"speculative decode: {st['verify_calls']} verify calls "
                   f"-> {st['tokens']} tokens "
                   f"(mean accepted span {st['mean_accepted']:.2f})")
+        if engine.prefix_caching:
+            pf = engine.prefix_stats()
+            print(f"prefix cache: {pf['hits']}/{pf['lookups']} admissions "
+                  f"hit ({pf['hit_rate']:.0%}), {pf['tokens_saved']} "
+                  f"prompt tokens served from shared pages "
+                  f"({pf['cached_pages']} pages cached)")
         print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
         print("sample:", out[0, :16].tolist())
         return

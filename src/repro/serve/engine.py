@@ -25,6 +25,16 @@ from ever stalling:
   and are updated incrementally at admission/eviction instead of being
   rebuilt and re-uploaded every step.
 
+With ``prefix_cache=True`` a radix tree over full-page token spans
+(``kv_cache.PrefixCache``) is threaded through admission: a request
+whose prompt prefix is cached shares the matched pages (refcount bump,
+no allocation, no model call) and chunk-prefills only the O(new tokens)
+tail from the matched boundary; an exact full-page match CoW-forks its
+final page before re-running the last prompt token for the first-sample
+logits.  Completed prefills register their full prompt pages back into
+the tree, and admission under page pressure reclaims LRU tree leaves —
+never a page a live request owns.
+
 The decode step remains fully jitted — paged flash-decode attention,
 device-side sampling, and an on-device output buffer read back only when
 a request finishes.
@@ -140,6 +150,13 @@ class PagedServeConfig:
     #                                    prompt joins (legacy behavior)
     spec_decode: int = 0           # draft tokens per verify step (0 = off;
     #                                greedy only, attention-only stacks)
+    prefix_cache: bool = False     # radix-tree prefix sharing across
+    #                                requests (attention-only stacks with
+    #                                chunked prefill; docs/serving.md)
+    reuse_hint: float = 0.5        # expected prompt-reuse rate, used by
+    #                                choose_page_size to price the
+    #                                share-vs-stream page tradeoff when
+    #                                the prefix cache is on
     age_limit: int = 8             # admission rounds before a waiting head
     #                                suspends backfill (anti-starvation)
     use_kernel: bool | None = None  # paged attention: None -> TPU only
@@ -203,16 +220,16 @@ class PagedEngine:
         has_attn = any(p in ("global", "local") for p in cfg.layer_pattern)
         attn_only = has_attn and all(
             p in ("global", "local") for p in cfg.layer_pattern)
+        reuse = (sc.reuse_hint or None) if (sc.prefix_cache
+                                            and attn_only) else None
         self.page_size = sc.page_size or (
-            KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse) if has_attn
+            KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse,
+                                reuse_rate=reuse) if has_attn
             else min(sc.max_seq, 128))   # attention-free: pages unused
         self.max_blocks = KV.num_blocks(sc.max_seq, self.page_size)
         n_pages = sc.n_pages or sc.max_batch * self.max_blocks + 1
         self.cache = KV.init_paged_cache(cfg, sc.max_batch, n_pages,
                                          self.page_size)
-        self.scheduler = Scheduler(sc.max_batch, self.page_size,
-                                   KV.PageAllocator(n_pages), sc.max_seq,
-                                   age_limit=sc.age_limit)
         self.buckets = (sc.buckets if sc.buckets is not None
                         else default_buckets(cfg, sc.max_seq))
 
@@ -234,6 +251,19 @@ class PagedEngine:
                 "spec_decode is greedy-only: draft acceptance compares "
                 "against the argmax chain, which sampling would break")
 
+        # prefix caching needs the span machinery to resume prefill at
+        # the matched boundary, so it gates exactly like chunked prefill
+        # (attention-only stacks; explicit prefill_chunk=0 turns it off)
+        self.prefix_caching = bool(sc.prefix_cache) and attn_only \
+            and self.prefill_chunk > 0
+        allocator = KV.PageAllocator(n_pages)
+        self.prefix_cache = (KV.PrefixCache(allocator, self.page_size)
+                             if self.prefix_caching else None)
+        self.scheduler = Scheduler(sc.max_batch, self.page_size,
+                                   allocator, sc.max_seq,
+                                   age_limit=sc.age_limit,
+                                   prefix_cache=self.prefix_cache)
+
         b = sc.max_batch
         self._block_tables = jnp.zeros((b, self.max_blocks), jnp.int32)
         self._lengths = jnp.zeros(b, jnp.int32)    # cached tokens per slot
@@ -244,7 +274,8 @@ class PagedEngine:
         self._step_count = 0
         self._next_rid = 0
         self._joins: dict[int, Any] = {}           # bucket -> jitted join
-        self._chunk_fn: Any = None                 # jitted prefill chunk
+        self._chunk_fns: dict[int, Any] = {}       # span width -> chunk fn
+        self._fork_fn: Any = None                  # jitted CoW page copy
         self._decode = jax.jit(self._decode_fn,
                                static_argnames=("chunk",))
         self._decode_spec = jax.jit(self._decode_spec_fn,
@@ -252,6 +283,9 @@ class PagedEngine:
         self.last_step_tokens = 0                  # benchmark counter
         self._spec_calls = 0                       # verify calls (stats)
         self._spec_tokens = 0                      # tokens those emitted
+        self._prefix_lookups = 0                   # admissions probed
+        self._prefix_hits = 0                      # admissions with a match
+        self._prefix_tokens_saved = 0              # prompt tokens not run
 
     # -- request API ----------------------------------------------------------
 
@@ -274,6 +308,17 @@ class PagedEngine:
         return {"verify_calls": calls, "tokens": self._spec_tokens,
                 "mean_accepted": self._spec_tokens / calls if calls else 0.0}
 
+    def prefix_stats(self) -> dict:
+        """Prefix-cache counters: admissions probed, admissions that
+        matched, prompt tokens served from shared pages instead of
+        being re-prefilled, and the tree's current page count."""
+        lookups, hits = self._prefix_lookups, self._prefix_hits
+        return {"lookups": lookups, "hits": hits,
+                "hit_rate": hits / lookups if lookups else 0.0,
+                "tokens_saved": self._prefix_tokens_saved,
+                "cached_pages": (len(self.prefix_cache)
+                                 if self.prefix_cache is not None else 0)}
+
     def step(self) -> list[Request]:
         """One continuous-batching iteration; returns finished requests
         (with ``.output`` filled)."""
@@ -283,6 +328,32 @@ class PagedEngine:
             row[:len(req.pages)] = req.pages
             self._block_tables = self._block_tables.at[req.slot].set(
                 jnp.asarray(row))
+            if self.prefix_caching:
+                self._prefix_lookups += 1
+            if req.cached_tokens:
+                # prefix hit: shared pages already hold the matched
+                # K/V; prefill resumes at the boundary through the
+                # chunk path, so only O(new tokens) run the model
+                self._prefix_hits += 1
+                self._prefix_tokens_saved += req.prefilled
+                if req.cow_fork is not None:
+                    src, dst = req.cow_fork
+                    self.cache = self._get_fork_fn()(
+                        self.cache, jnp.int32(src), jnp.int32(dst))
+                # the spec-decode draft history must cover the cached
+                # prefix the chunk path will never feed
+                hist_row = np.zeros(self.sc.max_seq, np.int32)
+                L = min(req.prompt_len, self.sc.max_seq)
+                hist_row[:L] = req.prompt[:L]
+                self._hist = self._hist.at[req.slot].set(
+                    jnp.asarray(hist_row))
+                # a tail that fits one chunk prefills inline, exactly
+                # where a miss would run its join — the hit request is
+                # decode-ready this very step instead of waiting a
+                # scheduling round (longer tails go through plan_step)
+                if req.prompt_len - req.prefilled <= self.prefill_chunk:
+                    self._prefill_one_chunk(req)
+                continue
             if (not self.prefill_chunk
                     or req.prompt_len <= self.prefill_chunk):
                 # whole-prompt join: chunking a prompt that fits in ONE
@@ -292,6 +363,7 @@ class PagedEngine:
                 # prefill only earns its keep on multi-chunk prompts
                 self._join(req)
                 req.prefilled = req.prompt_len
+                self.scheduler.register_prefix(req)
                 self.last_step_tokens += 1         # the prefill token
         plan = self.scheduler.plan_step(self.sc.decode_chunk,
                                         self.prefill_chunk or 1)
@@ -382,6 +454,28 @@ class PagedEngine:
             self._joins[bucket] = jax.jit(join)
         return self._joins[bucket]
 
+    # -- prefix cache ---------------------------------------------------------
+
+    def _get_fork_fn(self):
+        """Jitted copy-on-write page copy: duplicate page ``src`` into
+        ``dst`` across every attention layer's pools (prefix caching is
+        gated to attention-only stacks, so every group pages)."""
+        if self._fork_fn is None:
+            def fork(cache, src, dst):
+                def cp(pc, stacked):
+                    if stacked:     # (n_groups, n_pages, page, hkv, hd)
+                        return {k: pc[k].at[:, dst].set(pc[k][:, src])
+                                for k in ("k_pages", "v_pages")}
+                    return {k: pc[k].at[dst].set(pc[k][src])
+                            for k in ("k_pages", "v_pages")}
+                return {"layers": [cp(pc, True) for pc in cache["layers"]],
+                        "tail": [cp(pc, False) for pc in cache["tail"]]}
+
+            # donate the pools: the fork updates one page slice in
+            # place instead of copying the whole cache
+            self._fork_fn = jax.jit(fork, donate_argnums=(0,))
+        return self._fork_fn
+
     # -- chunked prefill ------------------------------------------------------
 
     def _prefill_one_chunk(self, req: Request) -> None:
@@ -395,15 +489,21 @@ class PagedEngine:
         tokens at a time.  The final chunk samples the first token
         exactly as a join would.
         """
-        C = self.prefill_chunk
         start, L = req.prefilled, req.prompt_len
-        c_real = min(C, L - start)
+        c_real = min(self.prefill_chunk, L - start)
+        # span width = pow2 bucket of the real remainder, not the full
+        # prefill_chunk: the final partial chunk of any prompt — and the
+        # short unshared tail after a prefix-cache hit — pays for the
+        # tokens it actually carries
+        C = 1
+        while C < c_real:
+            C *= 2
         final = start + c_real >= L
         tokens = np.zeros((1, C), np.int32)
         tokens[0, :c_real] = req.prompt[start:start + c_real]
         take_at = (L - 1 - start) if final else -1
         (self.cache, self._lengths, self._cur_tok, self._out_buf,
-         self._hist) = self._get_chunk_fn()(
+         self._hist) = self._get_chunk_fn(C)(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.int32(start), self._block_tables,
             self._lengths, jnp.int32(req.slot),
@@ -412,12 +512,12 @@ class PagedEngine:
         req.prefilled = start + c_real
         if final:
             req.generated = 1
+            self.scheduler.register_prefix(req)
             self.last_step_tokens += 1             # the prefill token
 
-    def _get_chunk_fn(self):
-        if self._chunk_fn is None:
+    def _get_chunk_fn(self, C: int):
+        if C not in self._chunk_fns:
             cfg, sc = self.cfg, self.sc
-            C = self.prefill_chunk
 
             def chunk(params, cache, tokens, start, block_tables, lengths,
                       slot, new_len, take_at, cur_tok, out_buf, hist, key):
@@ -449,8 +549,8 @@ class PagedEngine:
                     mode="drop")
                 return cache, lengths, cur_tok, out_buf, hist
 
-            self._chunk_fn = jax.jit(chunk)
-        return self._chunk_fn
+            self._chunk_fns[C] = jax.jit(chunk)
+        return self._chunk_fns[C]
 
     # -- decode ---------------------------------------------------------------
 

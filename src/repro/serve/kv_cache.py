@@ -16,10 +16,14 @@ Layout properties:
   budget (``PageAllocator``), not a max-batch-times-max-seq reservation;
 * pages are position-agnostic, so the layout admits prefix sharing: two
   block tables may point at the same physical page, and the allocator
-  refcounts owners (:meth:`PageAllocator.share`).  The engine does not
-  share pages yet — a future prefix-cache layer must only ever share
-  *full, frozen* blocks, because decode writes into the page holding
-  position ``lengths[b]``;
+  refcounts owners (:meth:`PageAllocator.share`).  :class:`PrefixCache`
+  is the sharing layer — a radix tree over *full-page token spans*
+  mapping each span to its physical page, so a new request's admission
+  matches its longest cached prefix and only prefills the tail.  Only
+  full, frozen blocks are ever shared, because decode writes into the
+  page holding position ``lengths[b]``; when a shared page *would* be
+  written (an exact full-page prefix hit must re-run its last token for
+  the first-sample logits), the page is copy-on-write forked first;
 * page 0 is a reserved scratch page: retired or inactive request slots
   keep all-zero block tables, so their (masked, ignored) decode writes
   land harmlessly in the scratch page instead of needing a branch.
@@ -43,7 +47,8 @@ SCRATCH_PAGE = 0
 
 
 def choose_page_size(cfg: ModelConfig, max_seq: int,
-                     cache=None, fused: bool = False) -> int:
+                     cache=None, fused: bool = False,
+                     reuse_rate: float | None = None) -> int:
     """KV page size from the analytical model (op key ``"flash_decode"``).
 
     The spec's dims are (G, S, D): G query heads per KV head stream over
@@ -60,6 +65,16 @@ def choose_page_size(cfg: ModelConfig, max_seq: int,
     pages under ``"flash_decode_oproj"``: the fused kernel's resident
     wo slab + output accumulator squeeze the VMEM budget the KV block
     competes for, so the fusion-aware search may pick smaller pages.
+
+    ``reuse_rate`` (prefix caching on) extends the tradeoff the page
+    size arbitrates to hit-rate-vs-streaming: the prefix tree shares
+    only *full* pages, so a cached hit re-prefills on average
+    ``(page - 1) / 2`` boundary-slack tokens — small pages share
+    better — while the decode kernel pays a fixed per-page cost
+    (block-table fetch + DMA issue) for every page it streams — large
+    pages stream better.  :func:`reuse_priced_page` re-prices the tuned
+    block under that model; ``reuse_rate`` is the expected fraction of
+    admissions that hit the cache.
     """
     from repro.tune import best_schedule
     g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
@@ -74,7 +89,49 @@ def choose_page_size(cfg: ModelConfig, max_seq: int,
         op, dtype_name = "flash_decode", kv_dtype.name
         dims = (g, max_seq, cfg.head_dim)
     sched = best_schedule(op, dims, dtype_name, cache=cache)
-    return max(1, min(sched.tiles[0], max_seq))
+    page = max(1, min(sched.tiles[0], max_seq))
+    if reuse_rate:
+        return reuse_priced_page(page, max_seq, float(reuse_rate))
+    return page
+
+
+# per-page fixed streaming overhead, in token-equivalents: what one
+# extra page boundary costs the decode kernel (block-table fetch + DMA
+# issue) relative to streaming one more KV token.  Small by design —
+# the analytical access counts tie across page sizes (every KV element
+# streams exactly once), so this models the *constant* per-page work
+# the access model cannot see.
+PAGE_OVERHEAD_TOKENS = 0.25
+
+
+def reuse_priced_page(tuned: int, max_seq: int, reuse_rate: float) -> int:
+    """Share-vs-stream page pricing for the prefix cache.
+
+    Candidates are the whole-page divisors of ``max_seq`` (the grid
+    needs whole blocks) plus the tuned block.  Each candidate ``p``
+    scores, in expected re-streamed tokens per request:
+
+    * **sharing loss** ``reuse_rate * (p - 1) / 2`` — the tree shares
+      full pages only, so a hit loses the matched prefix's boundary
+      slack (uniform residue: ``(p - 1) / 2`` tokens re-prefilled);
+    * **streaming loss** ``PAGE_OVERHEAD_TOKENS * max_seq / p`` — a
+      full-length decode stream touches ``max_seq / p`` pages, each
+      paying the fixed per-page cost.
+
+    ``reuse_rate -> 0`` recovers the tuned kernel block (the streaming
+    term dominates); higher reuse rates monotonically shrink the page.
+    Ties break toward the larger page (closer to the tuned block).
+    """
+    tuned = max(1, min(tuned, max_seq))
+    floor = min(8, max_seq)
+    cands = {d for d in range(floor, max_seq + 1) if max_seq % d == 0}
+    cands.add(tuned)
+
+    def score(p: int) -> float:
+        return (reuse_rate * (p - 1) / 2.0
+                + PAGE_OVERHEAD_TOKENS * max_seq / p)
+
+    return min(sorted(cands), key=lambda p: (score(p), -p))
 
 
 def num_blocks(length: int, page_size: int) -> int:
@@ -326,13 +383,17 @@ def make_paged_span_step(cfg: ModelConfig, block_tables: jax.Array,
 class PageAllocator:
     """Host-side refcounted free list over the page pool.
 
-    Page 0 (``SCRATCH_PAGE``) is reserved and never handed out.
-    :meth:`share` takes an extra reference for prefix sharing (an
-    allocator capability; the engine itself does not share pages yet —
-    see the module docstring for the rule a sharer must follow); a page
-    returns to the free list when its last owner releases it.  Every
-    transition is checked, so a leak or double-free fails loudly — the
-    scheduler's hypothesis suite leans on that.
+    Page 0 (``SCRATCH_PAGE``) is reserved and never handed out: it can
+    never be allocated, shared, or owned, which is what lets the engine
+    mask inactive block-table rows to it — and why :class:`PrefixCache`
+    rejects it outright (a scratch page in the tree would hand decode
+    garbage to every matching request).  :meth:`share` takes an extra
+    reference for prefix sharing (one per owning request, plus one held
+    by the prefix tree itself — see the module docstring for the
+    full-frozen-blocks rule a sharer must follow); a page returns to
+    the free list when its last owner releases it.  Every transition is
+    checked, so a leak or double-free fails loudly — the serving
+    hypothesis suite leans on that.
     """
 
     def __init__(self, n_pages: int):
@@ -351,6 +412,10 @@ class PageAllocator:
 
     def in_use(self) -> int:
         return self.capacity - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        """Current reference count (0 = free; scratch is always 0)."""
+        return int(self._refs[page])
 
     def alloc(self) -> int:
         if not self._free:
@@ -385,3 +450,143 @@ class PageAllocator:
     def free_many(self, pages) -> None:
         for p in pages:
             self.free(int(p))
+
+
+class _PrefixNode:
+    """One full-page token span cached in the prefix tree."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_used")
+
+    def __init__(self, key, page, parent):
+        self.key = key                  # tuple of page_size token ids
+        self.page = page                # physical page holding the span's KV
+        self.parent = parent
+        self.children: dict = {}        # key -> _PrefixNode
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Radix tree over full-page token spans -> physical KV pages.
+
+    Each node caches one *page-aligned* span of prompt tokens and the
+    physical page holding that span's K/V; a root-to-node path spells a
+    cached prompt prefix.  The tree holds its own allocator reference on
+    every cached page (``refcount == owning requests + 1``), so a page
+    outlives the request that prefilled it and later requests can
+    :meth:`match` it — admission bumps refcounts instead of
+    re-prefilling.
+
+    Invariants (enforced here, exercised by the serving hypothesis
+    suite in ``tests/test_serve_invariants.py``):
+
+    * spans are always exactly ``page_size`` tokens (page-aligned);
+    * the scratch page can never enter the tree;
+    * eviction (:meth:`evict`) only ever frees **LRU leaves whose sole
+      reference is the tree's** — a page a live request owns has
+      ``refcount >= 2`` and is skipped, so sharing can never free a
+      page out from under a reader.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = page_size
+        self._root = _PrefixNode((), -1, None)
+        self._pages: dict[int, _PrefixNode] = {}   # page -> node
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def pages(self) -> set[int]:
+        """The set of physical pages the tree currently references."""
+        return set(self._pages)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # -- lookup / registration ----------------------------------------------
+
+    def match(self, prompt) -> list[int]:
+        """Pages of the longest cached full-page prefix of ``prompt``,
+        in block order (possibly the whole prompt when its length is an
+        exact page multiple — the caller must then CoW-fork the last
+        page before re-running the final token).  Bumps LRU on the
+        matched path; takes no references — the caller shares each page
+        it actually attaches."""
+        p = self.page_size
+        toks = [int(t) for t in np.asarray(prompt).reshape(-1)]
+        node, out, t = self._root, [], self._tick()
+        for i in range(0, len(toks) - len(toks) % p, p):
+            child = node.children.get(tuple(toks[i:i + p]))
+            if child is None:
+                break
+            child.last_used = t
+            out.append(child.page)
+            node = child
+        return out
+
+    def insert(self, tokens, pages) -> int:
+        """Register full, frozen prompt pages; returns new nodes added.
+
+        ``tokens`` must be page-aligned and ``pages`` its physical page
+        per block.  Spans already cached keep their incumbent page (the
+        duplicate prefill is the caller's loss, not a correctness
+        issue); new nodes take the tree's own reference via
+        :meth:`PageAllocator.share`."""
+        p = self.page_size
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        if len(toks) % p:
+            raise ValueError(
+                f"prefix spans must be page-aligned: {len(toks)} tokens "
+                f"with page {p}")
+        if len(toks) != len(pages) * p:
+            raise ValueError(f"{len(toks)} tokens != {len(pages)} pages")
+        node, added, t = self._root, 0, self._tick()
+        for i, page in enumerate(pages):
+            key = tuple(toks[i * p:(i + 1) * p])
+            child = node.children.get(key)
+            if child is None:
+                page = int(page)
+                if page == SCRATCH_PAGE:
+                    raise ValueError(
+                        "scratch page can never enter the prefix tree")
+                if page in self._pages:
+                    raise ValueError(
+                        f"page {page} already cached under another span")
+                self.allocator.share(page)     # the tree's own reference
+                child = _PrefixNode(key, page, node)
+                node.children[key] = child
+                self._pages[page] = child
+                added += 1
+            child.last_used = t
+            node = child
+        return added
+
+    # -- eviction ------------------------------------------------------------
+
+    def evict(self, n_pages: int, protect=frozenset()) -> int:
+        """Free up to ``n_pages`` pages from LRU leaves the tree is the
+        sole owner of (``refcount == 1``); returns how many were freed.
+
+        Pages in ``protect`` (a just-matched path the caller is about
+        to attach) and pages any live request owns are never touched;
+        an internal node only becomes evictable once its subtree is
+        gone, so a cached span never loses the prefix context that
+        gives it meaning."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            for node in self._pages.values():
+                if (node.children or node.page in protect
+                        or self.allocator.refcount(node.page) != 1):
+                    continue
+                if victim is None or node.last_used < victim.last_used:
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            del self._pages[victim.page]
+            self.allocator.free(victim.page)
+            freed += 1
+        return freed

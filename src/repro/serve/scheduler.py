@@ -20,6 +20,18 @@ requests have bounded token budgets and whole-lifetime reservations,
 their pages always return, so a starving head is eventually admitted —
 the property the invariant suite checks.
 
+With a :class:`~repro.serve.kv_cache.PrefixCache` attached, admission
+first matches the prompt's longest cached full-page prefix: matched
+pages are *shared* (refcount bump) instead of allocated, the page
+budget counts only the unshared tail, and the request's prefill starts
+at the matched boundary.  An exact full-page match CoW-forks its last
+page (the final prompt token must re-run for the first-sample logits,
+and its K/V write would otherwise land in the shared page).  When the
+free list alone cannot cover the unshared tail, admission reclaims LRU
+leaves from the tree — pages only the tree references, never one a
+live request owns — so a full cache degrades to a smaller cache, not
+to an admission stall (the aging liveness guarantee survives sharing).
+
 **Step planning** (:meth:`Scheduler.plan_step`) is decode-priority:
 every decode-ready slot decodes every step (a decode-ready slot is never
 skipped in favor of prefill — the no-starvation invariant), and prefill
@@ -56,6 +68,8 @@ class Request:
     generated: int = 0              # tokens sampled so far
     age: int = 0                    # admission rounds spent waiting
     output: np.ndarray | None = None   # set at eviction
+    cached_tokens: int = 0          # prompt tokens matched in the prefix tree
+    cow_fork: tuple[int, int] | None = None   # (src, dst) page fork to apply
 
     @property
     def prompt_len(self) -> int:
@@ -98,12 +112,13 @@ class Scheduler:
 
     def __init__(self, max_batch: int, page_size: int,
                  allocator: PageAllocator, max_seq: int,
-                 age_limit: int = 8):
+                 age_limit: int = 8, prefix_cache=None):
         self.max_batch = max_batch
         self.page_size = page_size
         self.allocator = allocator
         self.max_seq = max_seq
         self.age_limit = age_limit
+        self.prefix_cache = prefix_cache       # kv_cache.PrefixCache | None
         self.waiting: deque[Request] = deque()
         self.running: dict[int, Request] = {}          # slot -> Request
         self._free_slots = list(range(max_batch - 1, -1, -1))
@@ -132,10 +147,69 @@ class Scheduler:
 
     # -- admission / eviction -------------------------------------------------
 
-    def _admit_one(self, req: Request) -> Request:
+    def _fresh_needed(self, req: Request, matched: int) -> int:
+        """Unshared pages a request must allocate given ``matched``
+        prefix tokens from the tree — shared pages don't count against
+        the budget, but an exact full-prompt match costs one extra page
+        for the CoW fork of its last block."""
+        shared = matched // self.page_size
+        fork = 1 if (matched and matched == req.prompt_len) else 0
+        return self.pages_needed(req) - shared + fork
+
+    def _prepare(self, req: Request) -> list[int] | None:
+        """Try to make ``req`` admittable right now.
+
+        Probes the prefix tree for the longest cached full-page prefix,
+        reclaims LRU tree leaves if the free list can't cover the
+        unshared tail (never a page a live request owns), and — if even
+        that falls short — gives the match up entirely and retries as a
+        full re-prefill.  Returns the matched pages in block order
+        (``[]`` for no match) when the request fits, else ``None``.
+        No references are taken here; :meth:`_admit_one` attaches them.
+        """
+        matched_pages: list[int] = []
+        if self.prefix_cache is not None:
+            matched_pages = self.prefix_cache.match(req.prompt)
+        need = self._fresh_needed(req,
+                                  len(matched_pages) * self.page_size)
+        if self.allocator.available() < need \
+                and self.prefix_cache is not None:
+            self.prefix_cache.evict(need - self.allocator.available(),
+                                    protect=frozenset(matched_pages))
+        if self.allocator.available() < need and matched_pages:
+            # sharing can't fit (the matched path pins pages eviction
+            # must not touch): drop the match and admit as a plain
+            # full re-prefill if the pool allows it
+            matched_pages = []
+            need = self._fresh_needed(req, 0)
+            if self.allocator.available() < need:
+                self.prefix_cache.evict(need - self.allocator.available())
+        if self.allocator.available() < need:
+            return None
+        return matched_pages
+
+    def _admit_one(self, req: Request,
+                   matched_pages: list[int]) -> Request:
         self.waiting.remove(req)
         req.slot = self._free_slots.pop()
-        req.pages = self.allocator.alloc_many(self.pages_needed(req))
+        shared = [self.allocator.share(p) for p in matched_pages]
+        matched = len(shared) * self.page_size
+        start = matched
+        if matched and matched == req.prompt_len:
+            # exact full-page hit: the last prompt token must re-run for
+            # the first-sample logits, and its K/V write lands in the
+            # final matched page — CoW-fork it (the engine copies the
+            # page contents device-side before the re-run)
+            dst = self.allocator.alloc()
+            src = shared[-1]
+            req.cow_fork = (src, dst)
+            self.allocator.free(src)        # drop our ref on the original
+            shared[-1] = dst
+            start = matched - 1
+        req.pages = shared + self.allocator.alloc_many(
+            self.pages_needed(req) - len(shared))
+        req.cached_tokens = matched
+        req.prefilled = start               # prefill resumes at the boundary
         self.running[req.slot] = req
         return req
 
@@ -144,24 +218,38 @@ class Scheduler:
         unless the head is starving (``age >= age_limit``), in which
         case admission is head-only until it gets in.  Each admitted
         request leaves with its slot and its whole page reservation
-        (block table order = logical block order)."""
+        (block table order = logical block order), the leading entries
+        shared from the prefix tree on a hit."""
         admitted = []
         while self.waiting and self._free_slots:
             head = self.waiting[0]
-            if self.allocator.available() >= self.pages_needed(head):
-                admitted.append(self._admit_one(head))
+            plan = self._prepare(head)
+            if plan is not None:
+                admitted.append(self._admit_one(head, plan))
                 continue
             if head.age >= self.age_limit:
                 break           # starving head blocks younger admissions
             for req in list(self.waiting)[1:]:
-                if self.allocator.available() >= self.pages_needed(req):
-                    admitted.append(self._admit_one(req))
+                plan = self._prepare(req)
+                if plan is not None:
+                    admitted.append(self._admit_one(req, plan))
                     break
             else:
                 break           # nobody fits
         for req in self.waiting:
             req.age += 1
         return admitted
+
+    def register_prefix(self, req: Request) -> None:
+        """Cache a fully-prefilled request's full prompt pages in the
+        tree (the engine calls this once prefill completes, when the
+        pages are frozen — decode writes strictly past them)."""
+        if self.prefix_cache is None:
+            return
+        nb = req.prompt_len // self.page_size
+        if nb:
+            self.prefix_cache.insert(req.prompt[:nb * self.page_size],
+                                     req.pages[:nb])
 
     def evict(self, slot: int) -> Request:
         """Release a finished (or cancelled) request's slot and pages."""

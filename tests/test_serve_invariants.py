@@ -17,6 +17,16 @@ Two layers:
   engine across the architecture families, including the fused and
   quantized compositions.  Chunking and speculation change scheduling
   and cost, never tokens.
+
+* **Prefix sharing** — a second simulation layer attaches a
+  :class:`~repro.serve.kv_cache.PrefixCache` and stamps page *contents*
+  host-side, so random traces can assert the sharing contracts: every
+  page's refcount equals its owning requests plus the tree's reference,
+  no write ever lands on a shared or cached page (the frozen-blocks
+  rule), tree spans stay page-aligned, the scratch page never enters
+  the tree, and nothing leaks once the tree itself is dropped.  The
+  engine-level differential tests then prove ``prefix_cache=True``
+  generates byte-identical tokens to the unshared engine.
 """
 
 import dataclasses
@@ -226,6 +236,230 @@ def test_scheduler_invariants_property():
     run()
 
 
+# ===================== prefix sharing simulation ============================
+
+
+class _SimPrefix(_Sim):
+    """_Sim with a PrefixCache attached and page *contents* modelled
+    host-side: every simulated K/V write stamps (page, slot) with its
+    token, so shared pages can be checked to hold exactly the span the
+    tree promised, and the frozen-blocks rule (no write to a shared or
+    cached page) is asserted at write time rather than inferred."""
+
+    def __init__(self, max_batch, page_size, n_pages, max_seq,
+                 decode_chunk=4, prefill_chunk=4, age_limit=4):
+        self.alloc = KV.PageAllocator(n_pages)
+        self.tree = KV.PrefixCache(self.alloc, page_size)
+        self.sched = Scheduler(max_batch, page_size, self.alloc, max_seq,
+                               age_limit=age_limit,
+                               prefix_cache=self.tree)
+        self.decode_chunk = decode_chunk
+        self.prefill_chunk = prefill_chunk
+        self.admitted_rids: list[int] = []
+        self.finished_rids: list[int] = []
+        self.contents: dict[int, list] = {}     # page -> page_size slots
+        self.hits = 0
+
+    def submit_tokens(self, rid, prompt, max_new):
+        self.sched.submit(
+            Request(rid, np.asarray(prompt, np.int32), max_new))
+
+    def _write(self, r, lo, hi):
+        """One span of simulated K/V writes.  The invariant: a written
+        page is always privately owned (refcount 1) and outside the
+        tree — shared and cached pages are frozen."""
+        p = self.sched.page_size
+        for pos in range(lo, min(hi, self.sched.max_seq)):
+            page = r.pages[pos // p]
+            assert page not in self.tree.pages(), \
+                f"write to cached page {page}"
+            assert self.alloc.refcount(page) == 1, \
+                f"write to shared page {page}"
+            tok = int(r.prompt[pos]) if pos < r.prompt_len else -(r.rid + 1)
+            self.contents.setdefault(page, [None] * p)[pos % p] = tok
+
+    def step(self):
+        p = self.sched.page_size
+        for req in self.sched.admit():
+            assert req.slot >= 0
+            assert len(req.pages) == self.sched.pages_needed(req)
+            assert req.rid not in self.admitted_rids, "double admission"
+            self.admitted_rids.append(req.rid)
+            if req.cow_fork:
+                src, dst = req.cow_fork
+                assert dst == req.pages[req.cached_tokens // p - 1]
+                assert self.alloc.refcount(dst) == 1, "fork page shared"
+                self.contents[dst] = list(self.contents[src])  # page copy
+            if req.cached_tokens:
+                self.hits += 1
+                assert req.cached_tokens % p == 0, "unaligned match"
+                assert req.prefilled >= req.cached_tokens - 1
+                for b in range(req.cached_tokens // p):
+                    span = [int(t) for t in req.prompt[b * p:(b + 1) * p]]
+                    assert self.contents.get(req.pages[b]) == span, \
+                        "shared page holds the wrong span"
+        plan = self.sched.plan_step(self.decode_chunk, self.prefill_chunk)
+        ready = {s for s, r in self.sched.running.items()
+                 if r.decode_ready}
+        assert set(plan.decode_slots) == ready, "decode-ready slot skipped"
+        for s in plan.decode_slots:
+            r = self.sched.running[s]
+            lo = r.prompt_len + r.generated
+            r.generated += min(self.decode_chunk,
+                               r.max_new_tokens - r.generated)
+            self._write(r, lo, r.prompt_len + r.generated)
+        for s in plan.prefill_slots:
+            r = self.sched.running[s]
+            lo = r.prefilled
+            r.prefilled += min(self.prefill_chunk,
+                               r.prompt_len - r.prefilled)
+            self._write(r, lo, r.prefilled)
+            if r.prefill_done:
+                if r.generated == 0:
+                    r.generated = 1
+                    self._write(r, r.prompt_len, r.prompt_len + 1)
+                self.sched.register_prefix(r)   # mirror the engine hook
+        for s in [s for s, r in self.sched.running.items() if r.done]:
+            self.finished_rids.append(self.sched.evict(s).rid)
+        self.check_pages()
+
+    def check_pages(self):
+        from collections import Counter
+        owners = Counter(pg for r in self.sched.running.values()
+                         for pg in r.pages)
+        tree_pages = self.tree.pages()
+        assert KV.SCRATCH_PAGE not in owners, "scratch page owned"
+        assert KV.SCRATCH_PAGE not in tree_pages, "scratch page cached"
+        for page in set(owners) | tree_pages:
+            assert self.alloc.refcount(page) == \
+                owners[page] + (page in tree_pages), (
+                    f"page {page}: refcount {self.alloc.refcount(page)} "
+                    f"!= {owners[page]} owners + "
+                    f"{int(page in tree_pages)} tree refs")
+        # the converse: every held page is owned or cached (no leak)
+        assert self.alloc.in_use() == len(set(owners) | tree_pages), \
+            "page leak"
+        for page, node in self.tree._pages.items():
+            assert len(node.key) == self.sched.page_size, "unaligned span"
+            assert node.page == page
+        assert len(self.sched.running) <= self.sched.max_batch
+
+    def drain(self, max_steps, drop_tree=True):
+        steps = 0
+        while self.sched.has_work:
+            self.step()
+            steps += 1
+            assert steps <= max_steps, (
+                f"scheduler failed to drain in {max_steps} steps: "
+                f"waiting={[r.rid for r in self.sched.waiting]} "
+                f"running={sorted(self.sched.running)}")
+        # only the tree holds pages now; dropping it must return them all
+        assert self.alloc.in_use() == len(self.tree), "leak at drain"
+        if drop_tree:
+            assert self.tree.evict(len(self.tree)) == len(self.tree) \
+                or len(self.tree) == 0
+            assert len(self.tree) == 0
+            assert self.alloc.available() == self.alloc.capacity, \
+                "leak after tree drop"
+
+
+def _prefix_trace(rng, n_requests=14, max_batch=3, page_size=4,
+                  n_pages=16, max_seq=24, **kw):
+    """Random trace over a small template pool so real matches (and the
+    occasional exact-match CoW fork, tail length 0) actually occur."""
+    sim = _SimPrefix(max_batch, page_size, n_pages, max_seq, **kw)
+    pool = [rng.integers(0, 97, (page_size * int(k),)).astype(np.int32)
+            for k in (1, 2, 2)]
+    rid = 0
+    for _ in range(n_requests):
+        pre = pool[int(rng.integers(len(pool)))]
+        tail = rng.integers(0, 97, (int(rng.integers(0, page_size)),))
+        prompt = np.concatenate([pre, tail.astype(np.int32)])
+        n = int(rng.integers(1, max_seq - len(prompt) + 1))
+        sim.submit_tokens(rid, prompt, n)
+        rid += 1
+        if rng.random() < 0.7:
+            sim.step()
+    sim.drain(max_steps=60 * n_requests)
+    assert sorted(sim.finished_rids) == list(range(rid))
+    return sim
+
+
+def test_prefix_sharing_trace_deterministic():
+    """Random sharing traces under fixed seeds: refcount accounting,
+    frozen-blocks, span alignment, scratch exclusion, drain leak —
+    and the pool is templated enough that matches really happen."""
+    hits = 0
+    for seed in range(8):
+        hits += _prefix_trace(np.random.default_rng(seed)).hits
+    assert hits > 0, "template pool never produced a prefix hit"
+
+
+def test_tree_eviction_unblocks_admission():
+    """Eviction-starvation regression: a tree grown to fill the pool
+    must not block non-matching prompts — admission reclaims LRU
+    leaves (never a live request's page) and the aging liveness
+    guarantee from the plain scheduler survives sharing."""
+    rng = np.random.default_rng(3)
+    sim = _SimPrefix(max_batch=2, page_size=4, n_pages=8, max_seq=16,
+                     age_limit=3)
+    rid = 0
+    for _ in range(3):                  # distinct prompts fill the tree
+        sim.submit_tokens(rid, rng.integers(100, 200, (8,)), 2)
+        rid += 1
+    while sim.sched.has_work:
+        sim.step()
+    assert len(sim.tree) == 6           # 2 full pages cached per prompt
+    assert sim.alloc.available() == 1   # the tree holds nearly everything
+    for _ in range(4):                  # non-matching stream: must evict
+        sim.submit_tokens(rid, rng.integers(300, 400, (8,)), 2)
+        rid += 1
+    sim.drain(max_steps=200, drop_tree=False)
+    assert sorted(sim.finished_rids) == list(range(rid))
+    sim.drain(max_steps=1)              # final leak check drops the tree
+
+
+def test_prefix_sharing_invariants_property():
+    """Hypothesis-driven sharing traces: same template-pool shape as the
+    deterministic twin, wider parameter space."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def run(data):
+        page_size = data.draw(st.sampled_from([2, 4]))
+        n_pages = data.draw(st.integers(6, 14))
+        max_batch = data.draw(st.integers(1, 3))
+        max_seq = page_size * (n_pages - 1)
+        sim = _SimPrefix(max_batch, page_size, n_pages, max_seq,
+                         decode_chunk=data.draw(st.integers(1, 4)),
+                         prefill_chunk=data.draw(st.sampled_from(
+                             [page_size, 2 * page_size])),
+                         age_limit=data.draw(st.integers(1, 4)))
+        pool = [np.asarray(data.draw(st.lists(
+                    st.integers(0, 50), min_size=page_size * k,
+                    max_size=page_size * k)), np.int32)
+                for k in (1, 2)]
+        rid = 0
+        for _ in range(data.draw(st.integers(1, 10))):
+            pre = pool[data.draw(st.integers(0, len(pool) - 1))]
+            tail = data.draw(st.lists(st.integers(0, 50), min_size=0,
+                                      max_size=page_size - 1))
+            prompt = np.concatenate([pre, np.asarray(tail, np.int32)])
+            if len(prompt) >= max_seq:
+                prompt = prompt[:max_seq - 1]
+            n = data.draw(st.integers(1, max_seq - len(prompt)))
+            sim.submit_tokens(rid, prompt, n)
+            rid += 1
+            if data.draw(st.booleans()):
+                sim.step()
+        sim.drain(max_steps=80 * max(rid, 1))
+        assert sorted(sim.finished_rids) == list(range(rid))
+
+    run()
+
+
 # ===================== token exactness: chunk + spec ========================
 
 ARCHS = ["granite-3-8b", "gemma2-9b", "recurrentgemma-9b", "mamba2-780m"]
@@ -315,6 +549,133 @@ def test_chunk_and_spec_token_exact_fp8kv():
     out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
                        spec_decode=2)
     np.testing.assert_array_equal(ref, out)
+
+
+# ===================== token exactness: prefix caching ======================
+
+
+def _reuse_prompts(cfg, seed=7):
+    """A 16-token shared prefix with distinct tails, plus two identical
+    prompts of exactly that prefix (2 full pages at page_size 8) — the
+    second one exercises the exact-full-match CoW fork path."""
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab, (16,)).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab, (k,)).astype(np.int32)
+             for k in (5, 3, 7)]
+    return [np.concatenate([pre, t]) for t in tails] + [pre.copy(),
+                                                        pre.copy()]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefix_cache_token_exact(arch):
+    """Shared-prefix paged generation with ``prefix_cache=True`` ==
+    the unshared engine, byte for byte — sharing changes which pages
+    admission touches, never tokens (hybrid stacks gate the cache off
+    and must agree trivially)."""
+    cfg = _cfg(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    prompts = _reuse_prompts(cfg)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=8)
+    out, eng = _generate(cfg, params, prompts, prefill_chunk=8,
+                         prefix_cache=True)
+    np.testing.assert_array_equal(ref, out)
+    attn_only = all(p in ("global", "local") for p in cfg.layer_pattern)
+    assert eng.prefix_caching == attn_only
+    if attn_only:
+        st = eng.prefix_stats()
+        assert st["hits"] > 0, "reuse workload never hit the cache"
+        assert st["tokens_saved"] > 0
+
+
+def test_prefix_cache_token_exact_fused():
+    """--fuse composition: prefix sharing over the fused hot path stays
+    byte-identical to the fused unshared engine."""
+    cfg = _cfg("gemma2-9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(8))
+    prompts = _reuse_prompts(cfg, seed=8)
+    ref, _ = _generate(cfg, params, prompts, fuse=True, prefill_chunk=8)
+    out, eng = _generate(cfg, params, prompts, fuse=True, prefill_chunk=8,
+                         prefix_cache=True)
+    np.testing.assert_array_equal(ref, out)
+    assert eng.prefix_stats()["hits"] > 0
+
+
+def test_prefix_cache_token_exact_w8():
+    """--quantize w8 composition: int8 projection weights under prefix
+    sharing stay token-exact."""
+    from repro.quant import quantize_params
+    cfg = _cfg("granite-3-8b")
+    params = quantize_params(T.init_params(cfg, jax.random.PRNGKey(9)))
+    prompts = _reuse_prompts(cfg, seed=9)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=8)
+    out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
+                       prefix_cache=True)
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_prefix_cache_token_exact_fp8kv():
+    """--quantize fp8kv composition: shared fp8 pages (and the CoW fork
+    page copy) read back exactly what the unshared engine wrote."""
+    cfg = dataclasses.replace(_cfg("granite-3-8b"),
+                              kv_cache_dtype=jnp.float8_e4m3fn)
+    params = T.init_params(cfg, jax.random.PRNGKey(10))
+    prompts = _reuse_prompts(cfg, seed=10)
+    ref, _ = _generate(cfg, params, prompts, prefill_chunk=8)
+    out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
+                       prefix_cache=True)
+    np.testing.assert_array_equal(ref, out)
+
+
+# ===================== prefix cache unit properties =========================
+
+
+def test_reuse_priced_page_size():
+    """Share-vs-stream pricing: no reuse recovers the tuned flash-decode
+    block; rising reuse never widens pages (finer pages share more);
+    the answer always tiles max_seq or is the tuned block itself."""
+    assert KV.reuse_priced_page(64, 64, 0.0) == 64
+    prev = None
+    for rr in (0.0, 0.25, 0.5, 1.0):
+        page = KV.reuse_priced_page(64, 64, rr)
+        assert 64 % page == 0
+        if prev is not None:
+            assert page <= prev, "more reuse chose a coarser page"
+        prev = page
+    assert KV.reuse_priced_page(64, 64, 0.5) < 64
+
+
+def test_choose_page_size_reuse_hint():
+    cfg = _cfg("granite-3-8b")
+    base = KV.choose_page_size(cfg, 64)
+    assert KV.choose_page_size(cfg, 64, reuse_rate=0.0) == base
+    shared = KV.choose_page_size(cfg, 64, reuse_rate=0.5)
+    assert shared <= base
+    assert 64 % shared == 0
+
+
+def test_scratch_page_never_shared_or_cached():
+    """The scratch page is un-shareable and un-evictable by
+    construction: PageAllocator refuses to share it and PrefixCache
+    refuses to cache it (alongside the span-shape checks)."""
+    alloc = KV.PageAllocator(4)
+    tree = KV.PrefixCache(alloc, 2)
+    with pytest.raises(ValueError, match="share"):
+        alloc.share(KV.SCRATCH_PAGE)
+    page = alloc.alloc()
+    with pytest.raises(ValueError, match="scratch"):
+        tree.insert(np.array([1, 2], np.int32), [KV.SCRATCH_PAGE])
+    with pytest.raises(ValueError, match="aligned"):
+        tree.insert(np.array([1, 2, 3], np.int32), [page, page])
+    with pytest.raises(ValueError, match="pages"):
+        tree.insert(np.array([1, 2], np.int32), [page, page])
+    tree.insert(np.array([5, 6], np.int32), [page])
+    with pytest.raises(ValueError, match="another span"):
+        tree.insert(np.array([7, 8], np.int32), [page])
+    assert tree.evict(1) == 0           # the live owner pins the page
+    alloc.free(page)                    # owner gone; only the tree's ref
+    assert tree.evict(1) == 1
+    assert len(tree) == 0
+    assert alloc.available() == alloc.capacity
 
 
 def test_chunked_prefill_interleaves_with_decode():
