@@ -63,3 +63,20 @@ def timed(fn: Callable) -> tuple[float, object]:
     t0 = time.perf_counter()
     out = fn()
     return (time.perf_counter() - t0) * 1e6, out
+
+
+def latency_summary(step_times) -> tuple[str, dict]:
+    """p50/p95/p99 of per-token step latencies (seconds).
+
+    Returns the derived-string fragment (``"p50=..us p95=..us
+    p99=..us"``) and the matching JSON fields (``p50_us``/``p95_us``/
+    ``p99_us``) so every record reports the same three percentiles the
+    same way.
+    """
+    import numpy as np
+    p50, p95, p99 = np.percentile(np.asarray(step_times) * 1e6,
+                                  [50, 95, 99])
+    frag = f"p50={p50:.0f}us p95={p95:.0f}us p99={p99:.0f}us"
+    fields = {"p50_us": round(p50, 1), "p95_us": round(p95, 1),
+              "p99_us": round(p99, 1)}
+    return frag, fields

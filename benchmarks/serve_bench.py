@@ -25,8 +25,15 @@ size.  Its records carry ``cache_hit_rate`` and
 ``admitted_tokens_saved`` — and are *not* comparable to the
 ``serve_static`` baseline, which runs the mixed-length workload.
 
-Reports decode tokens/sec (useful tokens only) and p50/p95 per-token
-step latency.  CSV contract: ``name,us_per_call,derived``.
+Reports decode tokens/sec (useful tokens only) and p50/p95/p99
+per-token step latency.  CSV contract: ``name,us_per_call,derived``.
+Every record embeds the engine's metrics snapshot (registry counters +
+the modeled-vs-measured DRAM report) under a ``metrics`` field;
+``check_bench.py`` ignores fields it doesn't guard, so snapshot schema
+growth never forces an ``--update``.  ``--trace`` / ``--metrics-out`` /
+``--miss-log`` wire a full :class:`repro.obs.Obs` into the measured
+paged engine (tracing inserts device fences — don't trust traced
+throughput numbers; see docs/observability.md).
 
     PYTHONPATH=src python -m benchmarks.serve_bench --smoke
 """
@@ -41,9 +48,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, write_json
+from benchmarks.common import emit, latency_summary, write_json
 from repro.configs import get_reduced
 from repro.models import transformer as T
+from repro.obs import Obs
 from repro.serve.engine import (DecodeEngine, PagedEngine, PagedServeConfig,
                                 ServeConfig)
 
@@ -204,6 +212,16 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every record as machine-readable "
                          "JSON (the BENCH_serve.json trajectory file)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="Chrome-trace span timeline for the measured "
+                         "paged engine; inserts device fences, so "
+                         "traced throughput numbers are NOT comparable")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the measured paged engine's metrics "
+                         "snapshot (registry + DRAM report) as JSON")
+    ap.add_argument("--miss-log", default=None, metavar="PATH",
+                    help="append schedule-cache misses as JSONL targets "
+                         "for python -m repro.tune --from-telemetry")
     args = ap.parse_args()
     if args.smoke:
         # large enough that per-step latency percentiles are taken over
@@ -227,10 +245,11 @@ def main() -> None:
 
     chunk = None if args.prefill_chunk < 0 else args.prefill_chunk
     static = DecodeEngine(cfg, params, ServeConfig(max_seq=args.max_seq))
+    obs = Obs(trace=args.trace, miss_log=args.miss_log)
     paged = PagedEngine(cfg, params, PagedServeConfig(
         max_seq=args.max_seq, max_batch=args.max_batch,
         page_size=args.page_size or None, prefill_chunk=chunk,
-        spec_decode=args.spec, decode_chunk=args.decode_chunk))
+        spec_decode=args.spec, decode_chunk=args.decode_chunk), obs=obs)
 
     # warm the compile caches outside the timed region: one full pass of
     # the same workload per engine (compiles are keyed by batch width,
@@ -247,19 +266,20 @@ def main() -> None:
 
     s_tps = s_useful / s_wall
     p_tps = p_useful / p_wall
-    s50, s95 = np.percentile(np.asarray(s_steps) * 1e6, [50, 95])
-    p50, p95 = np.percentile(np.asarray(p_steps) * 1e6, [50, 95])
+    s_lat, s_lat_f = latency_summary(s_steps)
+    p_lat, p_lat_f = latency_summary(p_steps)
     emit("serve_static", s_wall / max(s_useful, 1) * 1e6,
-         f"{s_tps:.1f} tok/s p50={s50:.0f}us p95={s95:.0f}us "
-         f"useful={s_useful}",
-         tok_s=round(s_tps, 2), p50_us=round(s50, 1),
-         p95_us=round(s95, 1), useful_tokens=int(s_useful))
+         f"{s_tps:.1f} tok/s {s_lat} useful={s_useful}",
+         tok_s=round(s_tps, 2), **s_lat_f,
+         useful_tokens=int(s_useful),
+         metrics=static.obs.snapshot())
     emit("serve_paged", p_wall / max(p_useful, 1) * 1e6,
-         f"{p_tps:.1f} tok/s p50={p50:.0f}us p95={p95:.0f}us "
+         f"{p_tps:.1f} tok/s {p_lat} "
          f"useful={p_useful} page={page} chunk={paged.prefill_chunk} "
          f"spec={paged.spec} speedup={p_tps / max(s_tps, 1e-9):.2f}x",
-         tok_s=round(p_tps, 2), p50_us=round(p50, 1),
-         p95_us=round(p95, 1), useful_tokens=int(p_useful),
+         tok_s=round(p_tps, 2), **p_lat_f,
+         useful_tokens=int(p_useful),
+         metrics=paged.obs.snapshot(),
          **paged_fields(paged, spec0))
 
     if args.fuse:
@@ -276,13 +296,14 @@ def main() -> None:
         f_wall, f_useful, f_steps = run_paged(fused, prompts, gens)
         assert f_useful == sum(gens), (f_useful, sum(gens))
         f_tps = f_useful / f_wall
-        f50, f95 = np.percentile(np.asarray(f_steps) * 1e6, [50, 95])
+        f_lat, f_lat_f = latency_summary(f_steps)
         emit("serve_paged_fused", f_wall / max(f_useful, 1) * 1e6,
-             f"{f_tps:.1f} tok/s p50={f50:.0f}us p95={f95:.0f}us "
+             f"{f_tps:.1f} tok/s {f_lat} "
              f"useful={f_useful} page={fused.page_size} "
              f"vs-unfused={f_tps / max(p_tps, 1e-9):.2f}x",
-             tok_s=round(f_tps, 2), p50_us=round(f50, 1),
-             p95_us=round(f95, 1), useful_tokens=int(f_useful),
+             tok_s=round(f_tps, 2), **f_lat_f,
+             useful_tokens=int(f_useful),
+             metrics=fused.obs.snapshot(),
              **paged_fields(fused, fspec0))
 
     if args.prefix_cache:
@@ -326,24 +347,31 @@ def main() -> None:
         assert sh_useful == sum(r_gens), (sh_useful, sum(r_gens))
         n_tps = n_useful / n_wall
         sh_tps = sh_useful / sh_wall
-        n50, n95 = np.percentile(np.asarray(n_steps) * 1e6, [50, 95])
-        h50, h95 = np.percentile(np.asarray(sh_steps) * 1e6, [50, 95])
+        n_lat, n_lat_f = latency_summary(n_steps)
+        h_lat, h_lat_f = latency_summary(sh_steps)
         emit("serve_paged_noshare", n_wall / max(n_useful, 1) * 1e6,
-             f"{n_tps:.1f} tok/s p50={n50:.0f}us p95={n95:.0f}us "
+             f"{n_tps:.1f} tok/s {n_lat} "
              f"useful={n_useful} page={noshare.page_size} "
              f"(reuse workload, sharing off)",
-             tok_s=round(n_tps, 2), p50_us=round(n50, 1),
-             p95_us=round(n95, 1), useful_tokens=int(n_useful),
+             tok_s=round(n_tps, 2), **n_lat_f,
+             useful_tokens=int(n_useful),
+             metrics=noshare.obs.snapshot(),
              **paged_fields(noshare, nspec0))
         pf = paged_fields(share, sspec0, spfx0)
         emit("serve_paged_prefix", sh_wall / max(sh_useful, 1) * 1e6,
-             f"{sh_tps:.1f} tok/s p50={h50:.0f}us p95={h95:.0f}us "
+             f"{sh_tps:.1f} tok/s {h_lat} "
              f"useful={sh_useful} page={share.page_size} "
              f"hit={pf['cache_hit_rate']:.0%} "
              f"saved={pf['admitted_tokens_saved']}tok "
              f"vs-noshare={sh_tps / max(n_tps, 1e-9):.2f}x",
-             tok_s=round(sh_tps, 2), p50_us=round(h50, 1),
-             p95_us=round(h95, 1), useful_tokens=int(sh_useful), **pf)
+             tok_s=round(sh_tps, 2), **h_lat_f,
+             useful_tokens=int(sh_useful),
+             metrics=share.obs.snapshot(), **pf)
+
+    if args.metrics_out:
+        paged.obs.write_metrics(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    paged.obs.close()
 
     if args.json:
         write_json(args.json)

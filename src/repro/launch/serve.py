@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs import get_config, get_reduced
 from repro.models import transformer as T
 from repro.models.sharding import set_axis_mapping
+from repro.obs import Obs, format_metrics
 from repro.serve.engine import (DecodeEngine, PagedEngine, PagedServeConfig,
                                 ServeConfig)
 
@@ -77,6 +78,19 @@ def main() -> None:
                     help="expected prompt-reuse rate for the "
                          "share-vs-stream page-size pricing (only "
                          "with --prefix-cache)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the metrics snapshot (registry + "
+                         "modeled-vs-measured DRAM report) as JSON "
+                         "(docs/observability.md)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace (chrome://tracing / "
+                         "Perfetto) span timeline of every engine step; "
+                         "inserts block_until_ready fences, so traced "
+                         "runs are NOT for throughput numbers")
+    ap.add_argument("--miss-log", metavar="PATH", default=None,
+                    help="append schedule-cache misses as JSONL tuning "
+                         "targets for python -m repro.tune "
+                         "--from-telemetry")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -92,6 +106,27 @@ def main() -> None:
         print(f"quantized projection weights: {qb / 1e6:.1f} MB "
               f"(same projections at bf16: {db / 1e6:.1f} MB)")
     rng = np.random.default_rng(0)
+    obs = Obs(trace=args.trace, miss_log=args.miss_log)
+
+    def finish_obs(engine) -> None:
+        """Shared tail: one formatter for every serve-mode summary."""
+        if args.metrics_out:
+            engine.obs.write_metrics(args.metrics_out)
+            print(f"metrics snapshot -> {args.metrics_out}")
+            dram = engine.obs.snapshot()["dram"]
+            lines = format_metrics({"dram": {
+                k: {kk: v[kk] for kk in
+                    ("modeled_bytes", "used_bytes", "ratio")}
+                for k, v in dram["per_op"].items()}})
+            if lines:
+                print("modeled-vs-measured DRAM bytes per op key:")
+                print(lines)
+        if args.trace:
+            print(f"chrome trace -> {args.trace}")
+        if args.miss_log:
+            print(f"schedule-cache miss log -> {args.miss_log} "
+                  "(replay: python -m repro.tune --from-telemetry)")
+        engine.obs.close()
 
     if args.engine == "paged":
         engine = PagedEngine(cfg, params, PagedServeConfig(
@@ -101,7 +136,7 @@ def main() -> None:
             prefill_chunk=None if args.prefill_chunk < 0
             else args.prefill_chunk,
             spec_decode=args.spec, prefix_cache=args.prefix_cache,
-            reuse_hint=args.reuse_hint))
+            reuse_hint=args.reuse_hint), obs=obs)
         n_req = args.requests or args.batch
         lo = max(1, args.prompt_len // 2) if args.mixed_lens \
             else args.prompt_len
@@ -116,25 +151,24 @@ def main() -> None:
               f"chunk={engine.prefill_chunk} spec={engine.spec} "
               f"slots={args.batch} requests={n_req}"
               + (" fused" if args.fuse else ""))
+        # every summary (spec, prefix cache, step latency) renders
+        # through the one metrics formatter — no bespoke f-strings
+        sections = {}
         if engine.spec:
-            st = engine.spec_stats()
-            print(f"speculative decode: {st['verify_calls']} verify calls "
-                  f"-> {st['tokens']} tokens "
-                  f"(mean accepted span {st['mean_accepted']:.2f})")
+            sections["spec"] = engine.spec_stats()
         if engine.prefix_caching:
-            pf = engine.prefix_stats()
-            print(f"prefix cache: {pf['hits']}/{pf['lookups']} admissions "
-                  f"hit ({pf['hit_rate']:.0%}), {pf['tokens_saved']} "
-                  f"prompt tokens served from shared pages "
-                  f"({pf['cached_pages']} pages cached)")
+            sections["prefix_cache"] = engine.prefix_stats()
+        if sections:
+            print(format_metrics(sections))
         print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
         print("sample:", out[0, :16].tolist())
+        finish_obs(engine)
         return
 
     engine = DecodeEngine(cfg, params,
                           ServeConfig(max_seq=args.max_seq,
                                       temperature=args.temperature,
-                                      fuse=args.fuse))
+                                      fuse=args.fuse), obs=obs)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
                            dtype=np.int32)
     kwargs = {}
@@ -155,6 +189,7 @@ def main() -> None:
     tps = args.batch * args.gen / dt
     print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     print("sample:", out[0, :16].tolist())
+    finish_obs(engine)
 
 
 if __name__ == "__main__":

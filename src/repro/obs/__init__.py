@@ -1,0 +1,81 @@
+"""Serving observability: metrics registry, step-span tracing, and
+modeled-vs-measured DRAM accounting (docs/observability.md).
+
+:class:`Obs` is the bundle the engines take (``PagedEngine(obs=...)``,
+``DecodeEngine(obs=...)``): a :class:`~repro.obs.metrics.MetricsRegistry`
+that the engine, scheduler and kv-cache report into; an optional
+:class:`~repro.obs.trace.StepTracer` emitting Chrome-trace spans (the
+engines fence with ``block_until_ready`` ONLY when a tracer is
+attached); and a :class:`~repro.obs.dram.DramLedger` comparing the
+analytical model's predicted DRAM bytes against what the schedule
+cache actually resolved, per op key, while logging schedule-cache
+misses for ``python -m repro.tune --from-telemetry``.
+
+An engine constructed without an ``obs`` argument builds a private
+``Obs()`` — registry and ledger always on (they are host-side integer
+arithmetic), tracer off.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs.dram import DramLedger, read_miss_log
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               format_metrics, hist_quantile)
+from repro.obs.trace import NULL_SPAN, StepTracer, null_span
+
+__all__ = [
+    "Counter", "DramLedger", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL_SPAN", "Obs", "StepTracer", "format_metrics", "hist_quantile",
+    "null_span", "read_miss_log",
+]
+
+
+class Obs:
+    """One observability bundle per engine (or shared across engines).
+
+    ``trace`` / ``miss_log`` accept paths for convenience; pass a
+    constructed :class:`StepTracer` / :class:`DramLedger` /
+    :class:`MetricsRegistry` to share instances across engines.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 trace: StepTracer | str | os.PathLike | None = None,
+                 dram: DramLedger | None = None,
+                 miss_log: str | None = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        if trace is None or isinstance(trace, StepTracer):
+            self.tracer = trace
+        else:
+            self.tracer = StepTracer(trace)
+        self.dram = dram if dram is not None else DramLedger(
+            registry=self.registry, miss_log=miss_log)
+
+    def snapshot(self) -> dict:
+        """Registry snapshot plus the DRAM ledger's modeled-vs-measured
+        report under ``"dram"`` — JSON-safe plain data."""
+        snap = self.registry.snapshot()
+        snap["dram"] = self.dram.report()
+        return snap
+
+    def write_metrics(self, path: str | os.PathLike) -> None:
+        d = os.path.dirname(os.fspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1)
+            f.write("\n")
+
+    def close(self) -> None:
+        if self.tracer is not None:
+            self.tracer.close()
+        self.dram.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,259 @@
+"""Modeled-vs-measured DRAM accounting and schedule-cache telemetry.
+
+The paper's contribution is an analytical model that *predicts* memory
+traffic; this module closes the loop at serving time.  Every schedule
+resolution that flows through ``repro.tune.best_schedule`` — which is
+every tuned-op invocation, since ``kernels.ops`` consults it at jit
+TRACE time — is observed by the active :class:`DramLedger`, which
+records three things per op key:
+
+* **model said X** — ``predicted_dram_bytes`` of the analytic top
+  candidate for that spec (what the paper's search would pick today);
+* **schedule cache says Y** — ``predicted_dram_bytes`` of the tiles the
+  op actually ran with (a cache hit's persisted winner, or the same
+  analytic tiles on a miss), and the ratio **Z = Y / X**;
+* **cache hit or miss** — misses (resolutions that fell back to the
+  in-process analytic default instead of a persisted, measured
+  schedule) are counted in the registry and appended to a JSONL *miss
+  log* that ``python -m repro.tune --from-telemetry <log>`` replays as
+  tuning targets.  This is the fleet-telemetry → next-tuning-pass loop.
+
+Attribution works on the jit trace/execute split.  ``best_schedule``
+fires once per trace signature, not once per step, so the engine brackets
+each jitted dispatch in a :meth:`DramLedger.scope` tagged with the jit
+variant (``"decode[8]"``, ``"prefill[64]"``, ``"join[128]"``…).  The
+first execution of a tag traces and registers the tag's per-execution
+byte cost; every execution increments the tag's count, so per-step and
+per-request aggregation is resolution-bytes × execution-count — no
+device interaction, no per-op runtime hooks.
+
+Only one ledger observes at a time (a contextvar set by ``scope``);
+code running outside any scope is unobserved and pays a single None
+check inside ``best_schedule``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import json
+import os
+
+from repro import tune
+from repro.tune.schedule import OpSpec, Schedule
+
+_ACTIVE: contextvars.ContextVar["DramLedger | None"] = \
+    contextvars.ContextVar("repro_obs_dram_ledger", default=None)
+
+
+def _dispatch(spec: OpSpec, schedule: Schedule) -> None:
+    led = _ACTIVE.get()
+    if led is not None:
+        led.record(spec, schedule)
+
+
+# one process-wide observer; which ledger (if any) hears about a
+# resolution is decided by the scope contextvar above
+tune.set_schedule_observer(_dispatch)
+
+
+class DramLedger:
+    """Per-op-key modeled-vs-measured DRAM byte accounting.
+
+    ``registry`` (optional) receives ``schedule_cache.hits`` /
+    ``schedule_cache.misses`` counters; ``miss_log`` (optional path)
+    receives one JSONL line per distinct missed op key.
+    """
+
+    def __init__(self, registry=None, miss_log: str | None = None):
+        self._device = None                 # resolved lazily (pulls in jax)
+        self._tag: str | None = None        # active scope tag
+        # key -> {"spec", "tiles", "source", "resolved": n, "used_bytes",
+        #          "modeled_bytes"}
+        self._ops: dict[str, dict] = {}
+        self._tag_bytes: dict[str, int] = {}   # per-execution bytes by tag
+        self._tag_ops: dict[str, set[str]] = {}
+        self._execs: dict[str, int] = {}       # executions by tag
+        self._step_hist: list[int] = []        # bytes attributed per step
+        self._req_bytes: dict[int, float] = {}  # rid -> attributed bytes
+        self._pending = 0                      # bytes since last attribute()
+        self._logged: set[str] = set()
+        self._miss_log_path = miss_log
+        self._miss_f = None
+        if registry is not None:
+            self._m_hits = registry.counter("schedule_cache.hits")
+            self._m_misses = registry.counter("schedule_cache.misses")
+        else:
+            self._m_hits = self._m_misses = None
+
+    # -- observation ----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def scope(self, tag: str):
+        """Make this ledger the active observer, attributing any schedule
+        resolutions inside to ``tag``, and count one execution of it."""
+        token = _ACTIVE.set(self)
+        prev = self._tag
+        self._tag = tag
+        try:
+            yield self
+        finally:
+            self._tag = prev
+            _ACTIVE.reset(token)
+            self._execs[tag] = self._execs.get(tag, 0) + 1
+            self._pending += self._tag_bytes.get(tag, 0)
+
+    def record(self, spec: OpSpec, schedule: Schedule) -> None:
+        """Observer callback from ``tune.best_schedule`` (trace time)."""
+        if self._device is None:
+            self._device = tune.device_kind()
+        key = spec.key(self._device)
+        ent = self._ops.get(key)
+        if ent is None:
+            ent = self._ops[key] = {
+                "spec": spec,
+                "tiles": schedule.tiles,
+                "source": schedule.source,
+                "resolved": 0,
+                "used_bytes": self._bytes_of(spec, schedule.tiles),
+                "modeled_bytes": self._modeled(spec),
+            }
+        ent["resolved"] += 1
+        hit = schedule.source == "cache"
+        if self._m_hits is not None:
+            (self._m_hits if hit else self._m_misses).inc()
+        if not hit and key not in self._logged:
+            self._logged.add(key)
+            self._log_miss(spec, schedule)
+        tag = self._tag
+        if tag is not None and ent["used_bytes"] is not None:
+            self._tag_bytes[tag] = (self._tag_bytes.get(tag, 0)
+                                    + ent["used_bytes"])
+            self._tag_ops.setdefault(tag, set()).add(key)
+
+    @staticmethod
+    def _bytes_of(spec: OpSpec, tiles) -> int | None:
+        try:
+            return int(tune.predicted_dram_bytes(spec, tuple(tiles)))
+        except ValueError:
+            # non-dividing tiles: the kernel takes its oracle fallback,
+            # which the blocking model cannot score
+            return None
+
+    def _modeled(self, spec: OpSpec) -> int | None:
+        top = tune.candidates(spec)[0]
+        return self._bytes_of(spec, top.tiles)
+
+    def _log_miss(self, spec: OpSpec, schedule: Schedule) -> None:
+        if self._miss_log_path is None:
+            return
+        if self._miss_f is None:
+            d = os.path.dirname(self._miss_log_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self._miss_f = open(self._miss_log_path, "a")
+        self._miss_f.write(json.dumps({
+            "op": spec.op, "dims": list(spec.dims), "dtype": spec.dtype,
+            "stride": spec.stride, "device": self._device,
+            "fallback_tiles": list(schedule.tiles),
+            "source": schedule.source,
+        }) + "\n")
+        self._miss_f.flush()
+
+    # -- aggregation ----------------------------------------------------------
+
+    def end_step(self, rids=()) -> int:
+        """Close one engine step: bank the bytes its scopes accumulated
+        into the per-step history and split them evenly across the step's
+        active request ids.  Returns the step's byte total."""
+        bytes_this_step = self._pending
+        self._pending = 0
+        self._step_hist.append(bytes_this_step)
+        rids = list(rids)
+        if rids and bytes_this_step:
+            share = bytes_this_step / len(rids)
+            for rid in rids:
+                self._req_bytes[rid] = self._req_bytes.get(rid, 0.0) + share
+        return bytes_this_step
+
+    def report(self) -> dict:
+        """JSON-safe modeled-vs-measured report.
+
+        ``per_op[key]`` holds the "model said X, schedule cache says Y,
+        ratio Z" triple plus how the tiles were sourced; ``per_tag``
+        maps each jit-variant scope to its execution count and total
+        bytes; ``per_step``/``per_request`` summarize attribution.
+        """
+        per_op = {}
+        for key, ent in sorted(self._ops.items()):
+            X, Y = ent["modeled_bytes"], ent["used_bytes"]
+            per_op[key] = {
+                "tiles": list(ent["tiles"]),
+                "source": ent["source"],
+                "resolved": ent["resolved"],
+                "modeled_bytes": X,
+                "used_bytes": Y,
+                "ratio": (round(Y / X, 4) if X and Y is not None else None),
+            }
+        per_tag = {tag: {"executions": n,
+                         "bytes_per_execution": self._tag_bytes.get(tag, 0),
+                         "ops": sorted(self._tag_ops.get(tag, ()))}
+                   for tag, n in sorted(self._execs.items())}
+        steps = self._step_hist
+        total = sum(b * n["executions"] for b, n in
+                    ((self._tag_bytes.get(t, 0), v)
+                     for t, v in per_tag.items()))
+        out = {
+            "device": self._device,
+            "per_op": per_op,
+            "per_tag": per_tag,
+            "total_bytes": total,
+            "per_step": {
+                "steps": len(steps),
+                "bytes_mean": (round(sum(steps) / len(steps), 1)
+                               if steps else 0.0),
+                "bytes_max": max(steps) if steps else 0,
+            },
+            "per_request": {
+                "requests": len(self._req_bytes),
+                "bytes_mean": (round(sum(self._req_bytes.values())
+                                     / len(self._req_bytes), 1)
+                               if self._req_bytes else 0.0),
+                "by_rid": {str(r): round(v, 1)
+                           for r, v in sorted(self._req_bytes.items())},
+            },
+        }
+        return out
+
+    def close(self) -> None:
+        if self._miss_f is not None:
+            self._miss_f.close()
+            self._miss_f = None
+
+
+def read_miss_log(path: str) -> list[dict]:
+    """Parse a miss-log JSONL file into deduplicated tuning targets.
+
+    Tolerates blank/corrupt lines (a crashed run truncates mid-line);
+    each target dict has ``op``, ``dims``, ``dtype``, ``stride`` and is
+    unique by that identity.
+    """
+    targets: list[dict] = []
+    seen: set[tuple] = set()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+                ident = (d["op"], tuple(d["dims"]),
+                         d.get("dtype", "float32"), int(d.get("stride", 1)))
+            except (ValueError, KeyError, TypeError):
+                continue
+            if ident in seen:
+                continue
+            seen.add(ident)
+            targets.append({"op": ident[0], "dims": list(ident[1]),
+                            "dtype": ident[2], "stride": ident[3]})
+    return targets

@@ -43,6 +43,7 @@ a request finishes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -52,6 +53,8 @@ import numpy as np
 from repro.kernels import ops
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.obs import Obs
+from repro.obs.trace import null_span
 from repro.serve import kv_cache as KV
 from repro.serve.scheduler import Request, Scheduler
 
@@ -82,8 +85,13 @@ class DecodeEngine:
     """Static batch: every request prefills together (left-padded to a
     common length) and decodes in lock-step for a fixed token budget."""
 
-    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
+                 obs: Obs | None = None):
         self.cfg, self.params, self.sc = cfg, params, sc
+        self.obs = obs if obs is not None else Obs()
+        reg = self.obs.registry
+        self._m_prefill_tokens = reg.counter("engine.prefill_tokens")
+        self._m_decode_tokens = reg.counter("engine.decode_tokens")
 
         def prefill(*a, **kw):
             # the fusion flag is read at TRACE time; each engine owns its
@@ -98,21 +106,36 @@ class DecodeEngine:
                  enc_embeds=None, prefix_embeds=None) -> np.ndarray:
         """prompts: (B, S0) int32 (right-aligned).  Returns (B, n_tokens)."""
         cfg, sc = self.cfg, self.sc
-        _, s0 = prompts.shape
+        b, s0 = prompts.shape
         extras = {}
         if enc_embeds is not None:
             extras["enc_embeds"] = enc_embeds
         if prefix_embeds is not None:
             extras["prefix_embeds"] = prefix_embeds
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      max_seq=sc.max_seq, **extras)
+        tr = self.obs.tracer
+        sp = tr.span if tr is not None else null_span
+        with sp("prefill", cat="static"), \
+                self.obs.dram.scope(f"static_prefill[{s0}]"):
+            logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                          max_seq=sc.max_seq, **extras)
+            if tr is not None:
+                jax.block_until_ready(logits)
         pos = s0 + (cfg.prefix_tokens if prefix_embeds is not None else 0)
         rng = jax.random.PRNGKey(sc.seed)
         # the whole token loop runs on device (lax.scan, sampling
         # included) and transfers once — no per-token host sync
-        out = self._gen(self.params, logits, cache, jnp.int32(pos), rng,
-                        n_tokens=n_tokens)
-        return np.asarray(out)
+        with sp("decode", cat="static"), \
+                self.obs.dram.scope(f"static_generate[{n_tokens}]"):
+            out = self._gen(self.params, logits, cache, jnp.int32(pos), rng,
+                            n_tokens=n_tokens)
+            if tr is not None:
+                jax.block_until_ready(out)
+        with sp("readback", cat="static"):
+            host = np.asarray(out)
+        self._m_prefill_tokens.inc(b * s0)
+        self._m_decode_tokens.inc(b * n_tokens)
+        self.obs.dram.end_step(range(b))
+        return host
 
     def _gen_fn(self, params, logits, cache, pos, rng, *, n_tokens: int):
         cfg, sc = self.cfg, self.sc
@@ -212,20 +235,25 @@ class PagedEngine:
     decode, keeping one engine API across all architectures.
     """
 
-    def __init__(self, cfg: ModelConfig, params: Any, sc: PagedServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, sc: PagedServeConfig,
+                 obs: Obs | None = None):
         if cfg.is_encdec or cfg.prefix_tokens:
             raise NotImplementedError(
                 "paged serving covers decoder-only token models")
         self.cfg, self.params, self.sc = cfg, params, sc
+        self.obs = obs if obs is not None else Obs()
         has_attn = any(p in ("global", "local") for p in cfg.layer_pattern)
         attn_only = has_attn and all(
             p in ("global", "local") for p in cfg.layer_pattern)
         reuse = (sc.reuse_hint or None) if (sc.prefix_cache
                                             and attn_only) else None
-        self.page_size = sc.page_size or (
-            KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse,
-                                reuse_rate=reuse) if has_attn
-            else min(sc.max_seq, 128))   # attention-free: pages unused
+        with self.obs.dram.scope("setup"):
+            # page-size / chunk selection resolves the flash-decode
+            # schedule once, here — attributed to "setup", not a step
+            self.page_size = sc.page_size or (
+                KV.choose_page_size(cfg, sc.max_seq, fused=sc.fuse,
+                                    reuse_rate=reuse) if has_attn
+                else min(sc.max_seq, 128))   # attention-free: pages unused
         self.max_blocks = KV.num_blocks(sc.max_seq, self.page_size)
         n_pages = sc.n_pages or sc.max_batch * self.max_blocks + 1
         self.cache = KV.init_paged_cache(cfg, sc.max_batch, n_pages,
@@ -256,13 +284,16 @@ class PagedEngine:
         # (attention-only stacks; explicit prefill_chunk=0 turns it off)
         self.prefix_caching = bool(sc.prefix_cache) and attn_only \
             and self.prefill_chunk > 0
-        allocator = KV.PageAllocator(n_pages)
-        self.prefix_cache = (KV.PrefixCache(allocator, self.page_size)
+        reg = self.obs.registry
+        allocator = KV.PageAllocator(n_pages, metrics=reg)
+        self.prefix_cache = (KV.PrefixCache(allocator, self.page_size,
+                                            metrics=reg)
                              if self.prefix_caching else None)
         self.scheduler = Scheduler(sc.max_batch, self.page_size,
                                    allocator, sc.max_seq,
                                    age_limit=sc.age_limit,
-                                   prefix_cache=self.prefix_cache)
+                                   prefix_cache=self.prefix_cache,
+                                   metrics=reg)
 
         b = sc.max_batch
         self._block_tables = jnp.zeros((b, self.max_blocks), jnp.int32)
@@ -281,11 +312,16 @@ class PagedEngine:
         self._decode_spec = jax.jit(self._decode_spec_fn,
                                     static_argnames=("chunk",))
         self.last_step_tokens = 0                  # benchmark counter
-        self._spec_calls = 0                       # verify calls (stats)
-        self._spec_tokens = 0                      # tokens those emitted
-        self._prefix_lookups = 0                   # admissions probed
-        self._prefix_hits = 0                      # admissions with a match
-        self._prefix_tokens_saved = 0              # prompt tokens not run
+        # registry-backed counters (spec_stats/prefix_stats are views)
+        self._m_steps = reg.counter("engine.steps")
+        self._m_step_us = reg.histogram("engine.step_us")
+        self._m_decode_tokens = reg.counter("engine.decode_tokens")
+        self._m_prefill_tokens = reg.counter("engine.prefill_tokens")
+        self._m_spec_calls = reg.counter("spec.verify_calls")
+        self._m_spec_tokens = reg.counter("spec.tokens")
+        self._m_prefix_lookups = reg.counter("prefix_cache.lookups")
+        self._m_prefix_hits = reg.counter("prefix_cache.hits")
+        self._m_prefix_saved = reg.counter("prefix_cache.tokens_saved")
 
     # -- request API ----------------------------------------------------------
 
@@ -303,76 +339,118 @@ class PagedEngine:
 
     def spec_stats(self) -> dict:
         """Draft-verify counters: total verify calls, tokens they
-        emitted, and the mean accepted span (1.0 = plain decode)."""
-        calls = self._spec_calls
-        return {"verify_calls": calls, "tokens": self._spec_tokens,
-                "mean_accepted": self._spec_tokens / calls if calls else 0.0}
+        emitted, and the mean accepted span (1.0 = plain decode).
+        A thin view over the metrics registry (``spec.*``)."""
+        calls, toks = self._m_spec_calls.value, self._m_spec_tokens.value
+        return {"verify_calls": calls, "tokens": toks,
+                "mean_accepted": toks / calls if calls else 0.0}
 
     def prefix_stats(self) -> dict:
         """Prefix-cache counters: admissions probed, admissions that
         matched, prompt tokens served from shared pages instead of
-        being re-prefilled, and the tree's current page count."""
-        lookups, hits = self._prefix_lookups, self._prefix_hits
+        being re-prefilled, and the tree's current page count.
+        A thin view over the metrics registry (``prefix_cache.*``)."""
+        lookups = self._m_prefix_lookups.value
+        hits = self._m_prefix_hits.value
         return {"lookups": lookups, "hits": hits,
                 "hit_rate": hits / lookups if lookups else 0.0,
-                "tokens_saved": self._prefix_tokens_saved,
+                "tokens_saved": self._m_prefix_saved.value,
                 "cached_pages": (len(self.prefix_cache)
                                  if self.prefix_cache is not None else 0)}
 
     def step(self) -> list[Request]:
         """One continuous-batching iteration; returns finished requests
-        (with ``.output`` filled)."""
+        (with ``.output`` filled).
+
+        With a tracer attached, the step and its phases (host prep,
+        ``plan_step``, device dispatches, readback) emit Chrome-trace
+        spans, and each device dispatch is fenced with
+        ``block_until_ready`` so span durations mean device time.  With
+        no tracer, ``sp`` is the shared no-op span and NO fence runs —
+        the hot path stays async (guarded by ``tests/test_obs.py``).
+        """
+        t0 = time.perf_counter_ns()
+        tr = self.obs.tracer
+        sp = tr.span if tr is not None else null_span
         self.last_step_tokens = 0
-        for req in self.scheduler.admit():
-            row = np.full(self.max_blocks, KV.SCRATCH_PAGE, np.int32)
-            row[:len(req.pages)] = req.pages
-            self._block_tables = self._block_tables.at[req.slot].set(
-                jnp.asarray(row))
-            if self.prefix_caching:
-                self._prefix_lookups += 1
-            if req.cached_tokens:
-                # prefix hit: shared pages already hold the matched
-                # K/V; prefill resumes at the boundary through the
-                # chunk path, so only O(new tokens) run the model
-                self._prefix_hits += 1
-                self._prefix_tokens_saved += req.prefilled
-                if req.cow_fork is not None:
-                    src, dst = req.cow_fork
-                    self.cache = self._get_fork_fn()(
-                        self.cache, jnp.int32(src), jnp.int32(dst))
-                # the spec-decode draft history must cover the cached
-                # prefix the chunk path will never feed
-                hist_row = np.zeros(self.sc.max_seq, np.int32)
-                L = min(req.prompt_len, self.sc.max_seq)
-                hist_row[:L] = req.prompt[:L]
-                self._hist = self._hist.at[req.slot].set(
-                    jnp.asarray(hist_row))
-                # a tail that fits one chunk prefills inline, exactly
-                # where a miss would run its join — the hit request is
-                # decode-ready this very step instead of waiting a
-                # scheduling round (longer tails go through plan_step)
-                if req.prompt_len - req.prefilled <= self.prefill_chunk:
-                    self._prefill_one_chunk(req)
-                continue
-            if (not self.prefill_chunk
-                    or req.prompt_len <= self.prefill_chunk):
-                # whole-prompt join: chunking a prompt that fits in ONE
-                # chunk would pay the fixed-span chunk call (span =
-                # prefill_chunk, padded) where the bucketed join prices
-                # the prefill at the prompt's own pow2 bucket — chunked
-                # prefill only earns its keep on multi-chunk prompts
-                self._join(req)
-                req.prefilled = req.prompt_len
-                self.scheduler.register_prefix(req)
-                self.last_step_tokens += 1         # the prefill token
-        plan = self.scheduler.plan_step(self.sc.decode_chunk,
-                                        self.prefill_chunk or 1)
+        step_rids: set[int] = set()
+        with sp("step", cat="engine", args={"step": self._step_count}):
+            finished = self._step_inner(sp, tr, step_rids)
+        self._m_steps.inc()
+        self._m_step_us.observe((time.perf_counter_ns() - t0) / 1000.0)
+        self.obs.dram.end_step(sorted(step_rids))
+        return finished
+
+    def _step_inner(self, sp, tr, step_rids: set[int]) -> list[Request]:
+        with sp("host_prep", cat="engine"):
+            for req in self.scheduler.admit():
+                step_rids.add(req.rid)
+                row = np.full(self.max_blocks, KV.SCRATCH_PAGE, np.int32)
+                row[:len(req.pages)] = req.pages
+                self._block_tables = self._block_tables.at[req.slot].set(
+                    jnp.asarray(row))
+                if self.prefix_caching:
+                    self._m_prefix_lookups.inc()
+                if req.cached_tokens:
+                    # prefix hit: shared pages already hold the matched
+                    # K/V; prefill resumes at the boundary through the
+                    # chunk path, so only O(new tokens) run the model
+                    self._m_prefix_hits.inc()
+                    self._m_prefix_saved.inc(req.prefilled)
+                    if req.cow_fork is not None:
+                        src, dst = req.cow_fork
+                        with sp("dispatch.fork", cat="device"), \
+                                self.obs.dram.scope("cow_fork"):
+                            self.cache = self._get_fork_fn()(
+                                self.cache, jnp.int32(src), jnp.int32(dst))
+                    # the spec-decode draft history must cover the cached
+                    # prefix the chunk path will never feed
+                    hist_row = np.zeros(self.sc.max_seq, np.int32)
+                    L = min(req.prompt_len, self.sc.max_seq)
+                    hist_row[:L] = req.prompt[:L]
+                    self._hist = self._hist.at[req.slot].set(
+                        jnp.asarray(hist_row))
+                    # a tail that fits one chunk prefills inline, exactly
+                    # where a miss would run its join — the hit request is
+                    # decode-ready this very step instead of waiting a
+                    # scheduling round (longer tails go through plan_step)
+                    if req.prompt_len - req.prefilled <= self.prefill_chunk:
+                        with sp("dispatch.prefill", cat="device"):
+                            self._prefill_one_chunk(req)
+                            if tr is not None:
+                                jax.block_until_ready(self._cur_tok)
+                    continue
+                if (not self.prefill_chunk
+                        or req.prompt_len <= self.prefill_chunk):
+                    # whole-prompt join: chunking a prompt that fits in ONE
+                    # chunk would pay the fixed-span chunk call (span =
+                    # prefill_chunk, padded) where the bucketed join prices
+                    # the prefill at the prompt's own pow2 bucket — chunked
+                    # prefill only earns its keep on multi-chunk prompts
+                    with sp("dispatch.join", cat="device"):
+                        self._join(req)
+                        if tr is not None:
+                            jax.block_until_ready(self._cur_tok)
+                    req.prefilled = req.prompt_len
+                    self.scheduler.register_prefix(req)
+                    self.last_step_tokens += 1     # the prefill token
+        with sp("plan_step", cat="sched"):
+            plan = self.scheduler.plan_step(self.sc.decode_chunk,
+                                            self.prefill_chunk or 1)
+        step_rids.update(self.scheduler.running[s].rid
+                         for s in plan.decode_slots + plan.prefill_slots)
         # decode first: decode-ready slots are never stalled by prefill
         if plan.decode_slots:
-            self._decode_once(
-                [self.scheduler.running[s] for s in plan.decode_slots])
+            with sp("dispatch.decode", cat="device"):
+                self._decode_once(
+                    [self.scheduler.running[s] for s in plan.decode_slots])
+                if tr is not None:
+                    jax.block_until_ready(self._out_buf)
         for slot in plan.prefill_slots:
-            self._prefill_one_chunk(self.scheduler.running[slot])
+            with sp("dispatch.prefill", cat="device"):
+                self._prefill_one_chunk(self.scheduler.running[slot])
+                if tr is not None:
+                    jax.block_until_ready(self._cur_tok)
         finished = []
         done_slots = [s for s, r in self.scheduler.running.items()
                       if r.done]
@@ -380,7 +458,8 @@ class PagedEngine:
             # one host transfer covers every request finishing this step;
             # device state is NOT reset — the decode fns mask unoccupied
             # slots to scratch, and admission rewrites the row anyway
-            host_out = np.asarray(self._out_buf)
+            with sp("readback", cat="engine"):
+                host_out = np.asarray(self._out_buf)
             for slot in done_slots:
                 req = self.scheduler.running[slot]
                 req.output = host_out[slot, :req.generated].copy()
@@ -423,12 +502,16 @@ class PagedEngine:
         nb = KV.num_blocks(bucket, self.page_size)
         pages = np.full(nb, KV.SCRATCH_PAGE, np.int32)
         pages[:min(nb, len(req.pages))] = req.pages[:nb]
-        (self.cache, self._lengths, self._cur_tok, self._out_buf,
-         self._hist) = self._get_join(bucket)(
-            self.params, self.cache, jnp.asarray(prompt),
-            jnp.int32(L), jnp.int32(slot), jnp.asarray(pages),
-            self._lengths, self._cur_tok, self._out_buf, self._hist,
-            self._next_key())
+        # the scope tag carries the jit variant (one trace per bucket),
+        # so resolution bytes x execution count attributes correctly
+        with self.obs.dram.scope(f"join[{bucket}]"):
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist) = self._get_join(bucket)(
+                self.params, self.cache, jnp.asarray(prompt),
+                jnp.int32(L), jnp.int32(slot), jnp.asarray(pages),
+                self._lengths, self._cur_tok, self._out_buf, self._hist,
+                self._next_key())
+        self._m_prefill_tokens.inc(L)
         req.generated = 1
 
     def _get_join(self, bucket: int):
@@ -502,13 +585,15 @@ class PagedEngine:
         tokens = np.zeros((1, C), np.int32)
         tokens[0, :c_real] = req.prompt[start:start + c_real]
         take_at = (L - 1 - start) if final else -1
-        (self.cache, self._lengths, self._cur_tok, self._out_buf,
-         self._hist) = self._get_chunk_fn(C)(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.int32(start), self._block_tables,
-            self._lengths, jnp.int32(req.slot),
-            jnp.int32(start + c_real), jnp.int32(take_at),
-            self._cur_tok, self._out_buf, self._hist, self._next_key())
+        with self.obs.dram.scope(f"prefill[{C}]"):
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist) = self._get_chunk_fn(C)(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.int32(start), self._block_tables,
+                self._lengths, jnp.int32(req.slot),
+                jnp.int32(start + c_real), jnp.int32(take_at),
+                self._cur_tok, self._out_buf, self._hist, self._next_key())
+        self._m_prefill_tokens.inc(c_real)
         req.prefilled = start + c_real
         if final:
             req.generated = 1
@@ -707,28 +792,33 @@ class PagedEngine:
             # spreads a slot's budget over more scheduler visits instead
             # of burning idle full-span model calls here
             iters = -(-chunk // (self.spec + 1))
-            (self._cur_tok, self.cache, self._lengths, self._out_buf,
-             self._hist, emitted, calls) = self._decode_spec(
-                self.params, self.cache, self._cur_tok,
-                self._block_tables, self._lengths, jnp.asarray(occupied),
-                jnp.asarray(remaining), jnp.asarray(out_idx),
-                self._out_buf, self._hist, chunk=iters)
+            with self.obs.dram.scope(f"spec_decode[{iters}]"):
+                (self._cur_tok, self.cache, self._lengths, self._out_buf,
+                 self._hist, emitted, calls) = self._decode_spec(
+                    self.params, self.cache, self._cur_tok,
+                    self._block_tables, self._lengths,
+                    jnp.asarray(occupied), jnp.asarray(remaining),
+                    jnp.asarray(out_idx), self._out_buf, self._hist,
+                    chunk=iters)
             # the one per-step readback: how far each slot actually got
             emitted = np.asarray(emitted)
             for r in running:
                 n = int(emitted[r.slot])
                 r.generated += n
                 self.last_step_tokens += n
-            self._spec_calls += int(calls)
-            self._spec_tokens += int(emitted.sum())
+            self._m_spec_calls.inc(int(calls))
+            self._m_spec_tokens.inc(int(emitted.sum()))
+            self._m_decode_tokens.inc(int(emitted.sum()))
             return
-        (self._cur_tok, self.cache, self._lengths,
-         self._out_buf) = self._decode(
-            self.params, self.cache, self._cur_tok, self._block_tables,
-            self._lengths, jnp.asarray(occupied), jnp.asarray(remaining),
-            jnp.asarray(out_idx), self._out_buf, self._next_key(),
-            chunk=chunk)
+        with self.obs.dram.scope(f"decode[{chunk}]"):
+            (self._cur_tok, self.cache, self._lengths,
+             self._out_buf) = self._decode(
+                self.params, self.cache, self._cur_tok, self._block_tables,
+                self._lengths, jnp.asarray(occupied),
+                jnp.asarray(remaining), jnp.asarray(out_idx),
+                self._out_buf, self._next_key(), chunk=chunk)
         for r in running:
             steps = min(chunk, r.max_new_tokens - r.generated)
             r.generated += steps
             self.last_step_tokens += steps
+            self._m_decode_tokens.inc(steps)

@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import layers as L
 from repro.models.base import ParamDef, build, stack_defs
 from repro.models.config import ModelConfig
+from repro.obs.metrics import MetricsRegistry
 
 SCRATCH_PAGE = 0
 
@@ -396,12 +397,15 @@ class PageAllocator:
     hypothesis suite leans on that.
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int, metrics=None):
         if n_pages < 2:
             raise ValueError("need at least one scratch + one real page")
         self.n_pages = n_pages
         self._refs = np.zeros(n_pages, np.int32)
         self._free = list(range(n_pages - 1, 0, -1))   # page 0 reserved
+        m = metrics if metrics is not None else MetricsRegistry()
+        m.gauge("pages.capacity").set(self.capacity)
+        self._m_in_use = m.gauge("pages.in_use")
 
     @property
     def capacity(self) -> int:
@@ -423,6 +427,7 @@ class PageAllocator:
         page = self._free.pop()
         assert self._refs[page] == 0, page
         self._refs[page] = 1
+        self._m_in_use.set(self.in_use())
         return page
 
     def alloc_many(self, n: int) -> list[int]:
@@ -446,6 +451,7 @@ class PageAllocator:
         self._refs[page] -= 1
         if self._refs[page] == 0:
             self._free.append(page)
+            self._m_in_use.set(self.in_use())
 
     def free_many(self, pages) -> None:
         for p in pages:
@@ -487,12 +493,16 @@ class PrefixCache:
       page out from under a reader.
     """
 
-    def __init__(self, allocator: PageAllocator, page_size: int):
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 metrics=None):
         self.allocator = allocator
         self.page_size = page_size
         self._root = _PrefixNode((), -1, None)
         self._pages: dict[int, _PrefixNode] = {}   # page -> node
         self._clock = 0
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._m_cached = m.gauge("prefix_cache.cached_pages")
+        self._m_evicted = m.counter("prefix_cache.evicted_pages")
 
     def __len__(self) -> int:
         return len(self._pages)
@@ -561,6 +571,7 @@ class PrefixCache:
                 added += 1
             child.last_used = t
             node = child
+        self._m_cached.set(len(self._pages))
         return added
 
     # -- eviction ------------------------------------------------------------
@@ -589,4 +600,6 @@ class PrefixCache:
             del self._pages[victim.page]
             self.allocator.free(victim.page)
             freed += 1
+        self._m_evicted.inc(freed)
+        self._m_cached.set(len(self._pages))
         return freed

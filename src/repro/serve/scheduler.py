@@ -52,6 +52,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.kv_cache import PageAllocator, num_blocks
 
 
@@ -112,7 +113,7 @@ class Scheduler:
 
     def __init__(self, max_batch: int, page_size: int,
                  allocator: PageAllocator, max_seq: int,
-                 age_limit: int = 8, prefix_cache=None):
+                 age_limit: int = 8, prefix_cache=None, metrics=None):
         self.max_batch = max_batch
         self.page_size = page_size
         self.allocator = allocator
@@ -123,6 +124,13 @@ class Scheduler:
         self.running: dict[int, Request] = {}          # slot -> Request
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self._rr = 0                                   # backfill round-robin
+        # a private registry when none is shared keeps the report paths
+        # branch-free (same cost either way: one int op per event)
+        m = metrics if metrics is not None else MetricsRegistry()
+        self._m_admitted = m.counter("sched.admitted")
+        self._m_evicted = m.counter("sched.evicted")
+        self._m_queue_depth = m.gauge("sched.queue_depth")
+        self._m_head_age = m.gauge("sched.head_age")
 
     # -- queue ----------------------------------------------------------------
 
@@ -238,6 +246,9 @@ class Scheduler:
                 break           # nobody fits
         for req in self.waiting:
             req.age += 1
+        self._m_admitted.inc(len(admitted))
+        self._m_queue_depth.set(len(self.waiting))
+        self._m_head_age.set(self.waiting[0].age if self.waiting else 0)
         return admitted
 
     def register_prefix(self, req: Request) -> None:
@@ -258,6 +269,7 @@ class Scheduler:
         req.pages = []
         req.slot = -1
         self._free_slots.append(slot)
+        self._m_evicted.inc()
         return req
 
     # -- step planning --------------------------------------------------------

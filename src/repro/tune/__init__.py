@@ -32,10 +32,25 @@ __all__ = [
     "OpSpec", "Schedule", "ScheduleCache", "best_schedule", "candidates",
     "default_cache_path", "describe_candidates", "device_kind",
     "predicted_dram_accesses", "predicted_dram_bytes",
-    "schedule_to_string", "tune_op",
+    "schedule_to_string", "set_schedule_observer", "tune_op",
 ]
 
 _default_cache = ScheduleCache()
+
+# Telemetry tap (repro.obs): one process-wide callable notified of every
+# best_schedule resolution with ``(spec, schedule)``.  The observer runs
+# at jit TRACE time — it must be cheap and must not call back into
+# best_schedule.  ``None`` (the default) costs one comparison.
+_SCHEDULE_OBSERVER = None
+
+
+def set_schedule_observer(fn):
+    """Install ``fn(spec, schedule)`` as the resolution observer;
+    returns the previous observer (``None`` to uninstall)."""
+    global _SCHEDULE_OBSERVER
+    prev = _SCHEDULE_OBSERVER
+    _SCHEDULE_OBSERVER = fn
+    return prev
 
 
 def describe_candidates(spec: OpSpec, **kwargs) -> str:
@@ -77,8 +92,13 @@ def best_schedule(op: str, dims: tuple[int, ...], dtype: str = "float32",
             vmem_budget_bytes is None or
             fits_vmem(spec, hit.tiles,
                       vmem_budget(target, vmem_budget_bytes))):
-        return hit
-    return _derive(spec, vmem_budget_bytes, target)
+        result = hit
+    else:
+        result = _derive(spec, vmem_budget_bytes, target)
+    obs = _SCHEDULE_OBSERVER
+    if obs is not None:
+        obs(spec, result)
+    return result
 
 
 def tune_op(op: str, dims: tuple[int, ...], dtype: str = "float32",

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.tune matmul 4096 4096 4096
     PYTHONPATH=src python -m repro.tune conv2d 56 56 128 256 3 3 \\
         --dtype bfloat16 --stride 1 --cache experiments/schedules.json
+    PYTHONPATH=src python -m repro.tune --from-telemetry miss.jsonl
 
 Prints the analytic candidate table, times the top-N (on device, or in
 Pallas interpret mode off-TPU unless ``--no-measure``), and persists the
@@ -10,6 +11,14 @@ winner.  ``kernels.ops`` reads the *default* cache location
 (``$REPRO_TUNE_CACHE``, else ``~/.cache/repro/schedules.json``) — when
 tuning into a ``--cache`` override, point ``REPRO_TUNE_CACHE`` at that
 file at run time.
+
+``--from-telemetry LOG`` replays a serving miss log (the JSONL file a
+``repro.obs.DramLedger`` writes for every schedule-cache miss — see
+docs/observability.md) as tuning targets: each distinct (op, dims,
+dtype, stride) the fleet fell back to analytic tiles for is tuned and
+persisted, closing the telemetry → next-tuning-pass loop.  With
+``--dry-run`` the targets are listed and validated but nothing is
+measured or persisted.
 """
 
 from __future__ import annotations
@@ -20,12 +29,24 @@ from repro.tune import (OpSpec, ScheduleCache, describe_candidates,
                         device_kind, tune_op)
 
 
+def _tune_one(spec: OpSpec, args, cache: ScheduleCache) -> None:
+    print(f"tuning {spec.key(device_kind())}")
+    print(describe_candidates(spec))
+    winner = tune_op(spec.op, spec.dims, spec.dtype, spec.stride,
+                     top_n=args.top_n, measure=not args.no_measure,
+                     cache=cache)
+    extra = (f"  {winner.measured_us:.0f} us/call"
+             if winner.measured_us is not None else "")
+    print(f"winner: tiles={winner.tiles} ({winner.source}){extra}")
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(prog="python -m repro.tune",
                                  description=__doc__)
     from repro.tune.schedule import OPS
-    ap.add_argument("op", choices=OPS)
-    ap.add_argument("dims", type=int, nargs="+",
+    ap.add_argument("op", choices=OPS, nargs="?",
+                    help="op to tune (omit with --from-telemetry)")
+    ap.add_argument("dims", type=int, nargs="*",
                     help="GEMM ops (matmul, matmul_dgrad, matmul_w8, "
                          "matmul_fused): M N K; conv ops (conv2d, "
                          "conv2d_dgrad, conv2d_wgrad): X Y C K Fw Fh "
@@ -45,19 +66,36 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--cache", default=None,
                     help="schedule cache path (default: "
                          "$REPRO_TUNE_CACHE or ~/.cache/repro)")
+    ap.add_argument("--from-telemetry", metavar="LOG", default=None,
+                    help="replay a serving miss log (JSONL, one "
+                         "schedule-cache miss per line) as tuning targets")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="with --from-telemetry: list and validate the "
+                         "targets without measuring or persisting")
     args = ap.parse_args(argv)
 
-    spec = OpSpec(args.op, tuple(args.dims), args.dtype, args.stride)
-    print(f"tuning {spec.key(device_kind())}")
-    print(describe_candidates(spec))
-
     cache = ScheduleCache(args.cache)
-    winner = tune_op(args.op, tuple(args.dims), args.dtype, args.stride,
-                     top_n=args.top_n, measure=not args.no_measure,
-                     cache=cache)
-    extra = (f"  {winner.measured_us:.0f} us/call"
-             if winner.measured_us is not None else "")
-    print(f"winner: tiles={winner.tiles} ({winner.source}){extra}")
+
+    if args.from_telemetry is not None:
+        from repro.obs.dram import read_miss_log
+        targets = read_miss_log(args.from_telemetry)
+        print(f"{len(targets)} distinct miss target(s) in "
+              f"{args.from_telemetry}")
+        for t in targets:
+            spec = OpSpec(t["op"], tuple(t["dims"]), t["dtype"],
+                          t["stride"])
+            if args.dry_run:
+                print(f"  would tune {spec.key(device_kind())}")
+                continue
+            _tune_one(spec, args, cache)
+        if not args.dry_run and targets:
+            print(f"persisted to {cache.path}")
+        return
+
+    if args.op is None or not args.dims:
+        ap.error("op and dims are required (or use --from-telemetry LOG)")
+    spec = OpSpec(args.op, tuple(args.dims), args.dtype, args.stride)
+    _tune_one(spec, args, cache)
     print(f"persisted to {cache.path}")
     if args.cache:
         print("note: kernels.ops reads $REPRO_TUNE_CACHE (default "

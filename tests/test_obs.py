@@ -1,0 +1,287 @@
+"""Observability subsystem: metrics registry, Chrome-trace step spans,
+modeled-vs-measured DRAM accounting, and the tracing-off zero-cost
+guarantees (docs/observability.md)."""
+
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.obs import (DramLedger, MetricsRegistry, Obs, StepTracer,
+                       format_metrics, hist_quantile, read_miss_log)
+from repro.obs.metrics import Histogram
+from repro.serve.engine import PagedEngine, PagedServeConfig
+
+
+def _cfg(arch: str):
+    return dataclasses.replace(get_reduced(arch), dtype=jnp.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def _model(arch: str):
+    cfg = _cfg(arch)
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _run_paged(arch: str, obs=None):
+    """The shared tiny workload: two ragged prompts, 6 generated tokens."""
+    cfg, params = _model(arch)
+    engine = PagedEngine(cfg, params,
+                         PagedServeConfig(max_seq=64, max_batch=2),
+                         obs=obs)
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(3, 15, dtype=np.int32)]
+    out = engine.generate(prompts, 6)
+    return engine, out
+
+
+# ========================== metrics registry ================================
+
+
+def test_registry_get_or_create_and_conflicts():
+    reg = MetricsRegistry()
+    c = reg.counter("engine.steps")
+    assert reg.counter("engine.steps") is c
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    g = reg.gauge("pages.in_use")
+    g.set(7)
+    assert g.value == 7
+    # a registered name cannot change type...
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("engine.steps")
+    # ...and cannot be both a leaf and a group
+    with pytest.raises(ValueError, match="leaf and group"):
+        reg.counter("engine.steps.retries")
+    with pytest.raises(ValueError, match="leaf and group"):
+        reg.counter("engine")
+
+
+def test_registry_snapshot_nests_by_dots_and_is_json():
+    reg = MetricsRegistry()
+    reg.counter("a.b.c").inc(2)
+    reg.gauge("a.g").set(1)
+    reg.counter("top").inc()
+    snap = reg.snapshot()
+    assert snap == {"a": {"b": {"c": 2}, "g": 1}, "top": 1}
+    assert json.loads(reg.to_json()) == snap
+
+
+def test_histogram_buckets_and_quantiles():
+    h = Histogram(bounds=(10.0, 20.0, 40.0))
+    for v in (5, 15, 15, 35, 1000):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["buckets"] == {"10": 1, "20": 2, "40": 1, "+inf": 1}
+    assert snap["sum"] == pytest.approx(1070.0)
+    # p50 interpolates inside the (10, 20] bucket
+    assert 10.0 <= h.quantile(0.5) <= 20.0
+    # the open +inf tail reports its lower bound, not infinity
+    assert h.quantile(0.99) == pytest.approx(40.0)
+    assert hist_quantile({"count": 0, "sum": 0, "buckets": {}}, 0.5) == 0.0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Histogram(bounds=(10.0, 10.0))
+
+
+def test_format_metrics_one_formatter():
+    tree = {
+        "spec": {"verify_calls": 4, "mean_accepted": 2.5},
+        "prefix_cache": {"hit_rate": 0.25, "hits": 1},
+        "engine": {"step_us": {"count": 2, "sum": 30.0,
+                               "buckets": {"10": 1, "20": 1, "+inf": 0}}},
+    }
+    text = format_metrics(tree)
+    assert "spec.verify_calls" in text
+    assert "25.0%" in text                     # *rate floats as percents
+    assert "p50=" in text and "p99=" in text   # histograms as quantiles
+    # sections filter + order
+    only = format_metrics(tree, sections=("prefix_cache",))
+    assert "spec." not in only and "prefix_cache.hits" in only
+
+
+# ======================== Chrome-trace tracer ===============================
+
+
+def test_tracer_emits_valid_nested_chrome_trace(tmp_path):
+    path = tmp_path / "trace.json"
+    with StepTracer(path) as tr:
+        with tr.span("outer", cat="engine", args={"step": 0}):
+            with tr.span("inner_a"):
+                pass
+            with tr.span("inner_b"):
+                pass
+        tr.instant("marker")
+        tr.counter("queue", {"depth": 3})
+    events = json.loads(path.read_text())     # the file is one JSON doc
+    by_name = {e["name"]: e for e in events}
+    assert set(by_name) == {"outer", "inner_a", "inner_b", "marker",
+                            "queue"}
+    for e in events:
+        assert e["ph"] in ("X", "i", "C")
+        assert e["ts"] >= 0.0
+    # complete-span nesting is by interval containment
+    outer, a, b = by_name["outer"], by_name["inner_a"], by_name["inner_b"]
+    for inner in (a, b):
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= \
+            outer["ts"] + outer["dur"] + 1e-6
+    assert a["ts"] + a["dur"] <= b["ts"] + 1e-6   # siblings in order
+    assert outer["args"] == {"step": 0}
+    tr.close()                                 # idempotent
+
+
+def test_engine_trace_covers_plan_prefill_decode_spans(tmp_path):
+    path = tmp_path / "engine_trace.json"
+    obs = Obs(trace=str(path))
+    _run_paged("granite-3-8b", obs=obs)
+    obs.close()
+    events = json.loads(path.read_text())
+    names = {e["name"] for e in events}
+    assert {"step", "plan_step", "host_prep", "dispatch.decode",
+            "readback"} <= names
+    assert names & {"dispatch.join", "dispatch.prefill"}  # prompt ingest
+    steps = sorted((e for e in events if e["name"] == "step"),
+                   key=lambda e: e["ts"])
+    assert steps and all(e["ph"] == "X" for e in steps)
+    # engine steps are serial: monotonic and non-overlapping
+    for prev, cur in zip(steps, steps[1:]):
+        assert prev["ts"] + prev["dur"] <= cur["ts"] + 1e-6
+    # every other span nests inside some engine step
+    for e in events:
+        if e["name"] == "step" or e["ph"] != "X":
+            continue
+        assert any(s["ts"] - 1e-6 <= e["ts"] and
+                   e["ts"] + e["dur"] <= s["ts"] + s["dur"] + 1e-6
+                   for s in steps), f"{e['name']} outside all steps"
+
+
+# ================== tracing is observation, not perturbation ================
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "recurrentgemma-9b"])
+def test_tokens_identical_with_tracing_on(arch, tmp_path):
+    _, out_off = _run_paged(arch)
+    obs = Obs(trace=str(tmp_path / "t.json"))
+    _, out_on = _run_paged(arch, obs=obs)
+    obs.close()
+    assert np.array_equal(out_off, out_on)
+
+
+def test_no_host_syncs_when_tracing_off(monkeypatch):
+    cfg, params = _model("granite-3-8b")
+    calls = []
+    real = jax.block_until_ready
+    monkeypatch.setattr(jax, "block_until_ready",
+                        lambda x: calls.append(1) or real(x))
+    engine, _ = _run_paged("granite-3-8b")          # tracer is None
+    assert engine.obs.tracer is None
+    assert not calls, "engine fenced the device without a tracer attached"
+    obs = Obs(trace=StepTracer(os.devnull))
+    _run_paged("granite-3-8b", obs=obs)             # tracer attached
+    assert calls, "traced run never fenced — spans time dispatch only"
+    obs.close()
+
+
+# ==================== modeled-vs-measured DRAM ledger =======================
+
+
+def test_dram_ledger_records_resolutions_and_misses(tmp_path):
+    from repro import tune
+    miss_log = tmp_path / "miss.jsonl"
+    reg = MetricsRegistry()
+    led = DramLedger(registry=reg, miss_log=str(miss_log))
+    with led.scope("gemm[64]"):
+        tune.best_schedule("matmul", (64, 64, 64))
+    with led.scope("gemm[64]"):                     # memoized: no new miss
+        tune.best_schedule("matmul", (64, 64, 64))
+    led.end_step([0, 1])
+    rep = led.report()
+    (key,) = rep["per_op"]
+    assert key.startswith("matmul/")
+    ent = rep["per_op"][key]
+    # analytic fallback: the used tiles ARE the model's top candidate
+    assert ent["source"] == "analytic"
+    assert ent["modeled_bytes"] == ent["used_bytes"] > 0
+    assert ent["ratio"] == pytest.approx(1.0)
+    tag = rep["per_tag"]["gemm[64]"]
+    assert tag["executions"] == 2 and tag["ops"] == [key]
+    assert rep["total_bytes"] == 2 * tag["bytes_per_execution"]
+    assert rep["per_step"]["steps"] == 1
+    assert rep["per_request"]["requests"] == 2
+    assert reg.snapshot()["schedule_cache"]["misses"] >= 1
+    led.close()
+    # miss log round-trips into deduplicated tuning targets
+    targets = read_miss_log(str(miss_log))
+    assert targets == [{"op": "matmul", "dims": [64, 64, 64],
+                        "dtype": "float32", "stride": 1}]
+
+
+def test_read_miss_log_tolerates_corrupt_lines(tmp_path):
+    p = tmp_path / "miss.jsonl"
+    p.write_text('{"op": "matmul", "dims": [8, 8, 8]}\n'
+                 "not json\n"
+                 "\n"
+                 '{"op": "matmul", "dims": [8, 8, 8]}\n'     # duplicate
+                 '{"dims": [1]}\n')                          # no op key
+    assert read_miss_log(str(p)) == [
+        {"op": "matmul", "dims": [8, 8, 8], "dtype": "float32",
+         "stride": 1}]
+
+
+def test_tune_cli_replays_telemetry_dry_run(tmp_path, capsys):
+    from repro.tune.__main__ import main as tune_main
+    p = tmp_path / "miss.jsonl"
+    p.write_text('{"op": "matmul", "dims": [64, 64, 64], '
+                 '"dtype": "float32", "stride": 1}\n')
+    tune_main(["--from-telemetry", str(p), "--dry-run"])
+    out = capsys.readouterr().out
+    assert "1 distinct miss target(s)" in out
+    assert "would tune matmul/" in out
+    # an empty log is a clean no-op (CI runs this unconditionally)
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    tune_main(["--from-telemetry", str(empty), "--dry-run"])
+    assert "0 distinct miss target(s)" in capsys.readouterr().out
+    # without --from-telemetry, op and dims stay required
+    with pytest.raises(SystemExit):
+        tune_main([])
+
+
+# ===================== engine integration snapshot ==========================
+
+
+def test_engine_snapshot_sections_and_stat_views():
+    engine, _ = _run_paged("granite-3-8b")
+    snap = engine.obs.snapshot()
+    assert snap["engine"]["decode_tokens"] > 0
+    assert snap["engine"]["steps"] > 0
+    assert snap["engine"]["step_us"]["count"] == snap["engine"]["steps"]
+    assert snap["sched"]["admitted"] == 2
+    assert snap["pages"]["capacity"] > 0
+    # the tuner was consulted: schedule-cache section is non-empty...
+    sc = snap["schedule_cache"]
+    assert sc["hits"] + sc["misses"] > 0
+    # ...and every resolved op key carries the modeled-vs-measured triple
+    assert snap["dram"]["per_op"]
+    for ent in snap["dram"]["per_op"].values():
+        assert {"modeled_bytes", "used_bytes", "ratio"} <= set(ent)
+    assert snap["dram"]["per_tag"]
+    # stats views are thin reads over the same registry (one source of
+    # truth — the dict shapes are the pre-registry contract)
+    assert set(engine.spec_stats()) == {"verify_calls", "tokens",
+                                        "mean_accepted"}
+    assert set(engine.prefix_stats()) == {"lookups", "hits", "hit_rate",
+                                          "tokens_saved", "cached_pages"}
+    # snapshot is JSON-safe end to end
+    json.dumps(snap)
