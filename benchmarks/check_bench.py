@@ -36,6 +36,19 @@ the prefix-cache schema migrates via ``--update``.
     PYTHONPATH=src python -m benchmarks.check_bench \\
         --fresh BENCH_serve.ci.json
 
+``--kernels`` guards the kernel-microbenchmark trajectory
+(``BENCH_kernels.json``) instead, under the same split: the byte
+fields (``measured_*_bytes`` / ``modeled_*_bytes`` / ``page_size``)
+are deterministic grid-transfer and model accounting — exact match —
+while ``us_per_call`` is interpret-mode wall clock on whatever CPU CI
+landed on, so it is never compared.  The fused-beats-unfused byte
+invariant (the fusion PR's headline) is re-asserted on the fresh run:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench \\
+        --json BENCH_kernels.ci.json
+    PYTHONPATH=src python -m benchmarks.check_bench --kernels \\
+        --fresh BENCH_kernels.ci.json
+
 ``--update`` rewrites the committed file from the fresh run instead of
 checking (the explicit, reviewed way to move the baseline).
 """
@@ -50,6 +63,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 COMMITTED = os.path.join(REPO, "BENCH_serve.json")
+COMMITTED_KERNELS = os.path.join(REPO, "BENCH_kernels.json")
 
 
 def _records(path: str) -> dict[str, dict]:
@@ -152,26 +166,91 @@ def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
     return 0
 
 
+# deterministic per-record fields of the kernel-bench trajectory: kernel
+# grid-transfer accounting and model predictions, identical on any
+# machine — required and exact-matched when the committed record has them
+KERNEL_EXACT_FIELDS = ("measured_fused_bytes", "measured_unfused_bytes",
+                       "modeled_fused_bytes", "modeled_unfused_bytes",
+                       "page_size")
+
+
+def check_kernels(fresh_path: str, committed_path: str) -> int:
+    fresh = _records(fresh_path)
+    committed = _records(committed_path)
+    failures: list[str] = []
+
+    missing = sorted(set(committed) - set(fresh))
+    if missing:
+        failures.append(f"records missing from fresh run: {missing}")
+    n_exact = 0
+    for name, ref in committed.items():
+        if name not in fresh:
+            continue
+        got = fresh[name]
+        # same field-presence rule as the serving guard: only fields the
+        # committed record carries are required, so kernel_bench can grow
+        # its schema without churning the baseline
+        for field in KERNEL_EXACT_FIELDS:
+            if field not in ref:
+                continue
+            if got.get(field) != ref[field]:
+                failures.append(
+                    f"{name}: {field} {got.get(field)} != committed "
+                    f"{ref[field]} — the kernel's grid transfers or the "
+                    f"traffic model changed; rerun with --update if "
+                    f"intentional")
+            else:
+                n_exact += 1
+    # the fusion headline must hold on the fresh run itself, not just
+    # match history: fused variants move strictly fewer bytes
+    for name, got in sorted(fresh.items()):
+        mf, mu = (got.get("measured_fused_bytes"),
+                  got.get("measured_unfused_bytes"))
+        if mf is not None and mu is not None and not mf < mu:
+            failures.append(
+                f"{name}: measured_fused_bytes {mf} is not below "
+                f"unfused {mu} — fusion stopped saving traffic")
+
+    if failures:
+        print("\nkernel-benchmark guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"kernel-benchmark guard OK: {len(committed)} records, "
+          f"{n_exact} deterministic byte fields exact")
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True, metavar="PATH",
                     help="JSON written by a fresh serve_bench --smoke "
-                         "--json run")
-    ap.add_argument("--committed", default=COMMITTED, metavar="PATH",
+                         "--json (or, with --kernels, kernel_bench "
+                         "--json) run")
+    ap.add_argument("--kernels", action="store_true",
+                    help="guard the kernel-microbenchmark trajectory "
+                         "(BENCH_kernels.json): exact byte fields, no "
+                         "timing ratios")
+    ap.add_argument("--committed", default=None, metavar="PATH",
                     help="baseline to compare against (default: the "
-                         "repo's BENCH_serve.json)")
+                         "repo's BENCH_serve.json, or BENCH_kernels.json "
+                         "with --kernels)")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="allowed relative drop in paged/static speedup "
-                         "before failing (default 0.5)")
+                         "before failing (default 0.5; serving mode only)")
     ap.add_argument("--update", action="store_true",
                     help="replace the committed baseline with the fresh "
                          "run instead of checking")
     args = ap.parse_args()
+    committed = args.committed or \
+        (COMMITTED_KERNELS if args.kernels else COMMITTED)
     if args.update:
-        shutil.copyfile(args.fresh, args.committed)
-        print(f"updated {args.committed} from {args.fresh}")
+        shutil.copyfile(args.fresh, committed)
+        print(f"updated {committed} from {args.fresh}")
         return
-    sys.exit(check(args.fresh, args.committed, args.tolerance))
+    if args.kernels:
+        sys.exit(check_kernels(args.fresh, committed))
+    sys.exit(check(args.fresh, committed, args.tolerance))
 
 
 if __name__ == "__main__":

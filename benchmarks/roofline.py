@@ -20,11 +20,13 @@ import os
 
 from benchmarks.common import emit
 from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.core import TPU_V5E
 from repro.models.config import ModelConfig
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
+# hardware model shared with the kernel profiler (repro.core.TPU_V5E)
+PEAK_FLOPS = TPU_V5E.peak_bf16_flops
+HBM_BW = TPU_V5E.hbm_bytes_per_s
+LINK_BW = TPU_V5E.ici_bytes_per_s_per_link
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "dryrun")
 

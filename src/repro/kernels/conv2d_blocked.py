@@ -44,6 +44,30 @@ def vmem_bytes_required(bx: int, by: int, bc: int, bk: int,
     return streamed + resident
 
 
+def hbm_bytes(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+              bx: int, by: int, bc: int, bk: int,
+              bytes_per_elem: int = 2, stride: int = 1) -> int:
+    """Exact HBM traffic of one image through :func:`conv2d_tiled`.
+
+    Per (by, bx) level-1 spatial tile, the level-0 grid is (K/bk, C/bc)
+    with C minor-most: the halo'd input tile is (0, 0, cc)-indexed, so
+    it streams once per K block — elided to once total when C is a
+    single block; the (cc, kk)-indexed weight tile changes every step
+    (the whole filter bank moves once per spatial tile); each output
+    block is written once at the last C step.  Dims are output-space
+    (X, Y), matching the ``"conv2d"``/``"conv2d_dgrad"`` schedule keys;
+    tiles must divide (the kernels' fallback paths are not counted).
+    """
+    gx, gy = X // bx, Y // by
+    gk, gc = K // bk, C // bc
+    ih = (by - 1) * stride + Fh
+    iw = (bx - 1) * stride + Fw
+    x_tile = ih * iw * C * bytes_per_elem * (gk if gc > 1 else 1)
+    w_tile = Fh * Fw * C * K * bytes_per_elem
+    out = X * Y * K * bytes_per_elem
+    return gx * gy * (x_tile + w_tile) + out
+
+
 def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, fh: int, fw: int,
                  oh: int, ow: int, n_c: int, stride: int):
     @pl.when(pl.program_id(1) == 0)

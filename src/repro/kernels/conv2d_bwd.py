@@ -50,6 +50,28 @@ def vmem_bytes_required(bx: int, by: int, bc: int, bk: int,
     return streamed + resident
 
 
+def hbm_bytes(X: int, Y: int, C: int, K: int, Fw: int, Fh: int,
+              bx: int, by: int, bc: int, bk: int,
+              bytes_per_elem: int = 2, stride: int = 1) -> int:
+    """Exact HBM traffic of one image through :func:`conv2d_wgrad`.
+
+    Per (by, bx) spatial reduction tile, the (K/bk, C/bc) grid streams
+    the halo'd input tile once per K block (elided when C is a single
+    block) and the (0, 0, kk)-indexed cotangent tile once per K block
+    (its index is constant across the minor C dim), and writes the
+    whole fp32 dW once (every (cc, kk) cell writes its disjoint slab).
+    Dims follow the ``"conv2d_wgrad"`` key (the forward's, verbatim).
+    """
+    gx, gy = X // bx, Y // by
+    gk, gc = K // bk, C // bc
+    ih = (by - 1) * stride + Fh
+    iw = (bx - 1) * stride + Fw
+    per_tile = (ih * iw * C * bytes_per_elem * (gk if gc > 1 else 1)
+                + by * bx * K * bytes_per_elem
+                + Fh * Fw * C * K * 4)
+    return gx * gy * per_tile
+
+
 def _wgrad_kernel(x_ref, g_ref, o_ref, *, fh: int, fw: int,
                   oh: int, ow: int, stride: int):
     x = x_ref[...]                                   # (ih, iw, bc)

@@ -23,6 +23,25 @@ NEG_INF = -1e30
 BIG = 1e30  # lse sentinel for fully-masked rows: exp(s - BIG) == 0
 
 
+def hbm_bytes(seq_q: int, seq_kv: int, head_dim: int,
+              block_q: int, block_kv: int, bytes_per_elem: int = 2,
+              with_lse: bool = False) -> int:
+    """Exact HBM traffic of one head through :func:`_flash_forward`.
+
+    Grid (Sq/bq, Skv/bkv), KV minor-most: the q and output blocks are
+    (qi, 0)-indexed (once per q-row); the K/V blocks stream per q-row —
+    elided to a single pass when the KV extent is one block.  The score
+    matrix never exists in HBM (that is the point of the kernel);
+    ``with_lse`` adds the per-row fp32 residual the backward saves.
+    """
+    gq, gkv = seq_q // block_q, seq_kv // block_kv
+    q = seq_q * head_dim * bytes_per_elem
+    kv = 2 * seq_kv * head_dim * bytes_per_elem * (gq if gkv > 1 else 1)
+    out = seq_q * head_dim * bytes_per_elem
+    lse = seq_q * 4 if with_lse else 0
+    return q + kv + out + lse
+
+
 def attention_mask(qi, ki, *, block_q: int, block_kv: int, causal: bool,
                    window: int | None, kv_offset: int):
     """Valid-position mask for one (q-block, kv-block) tile.

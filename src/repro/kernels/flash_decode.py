@@ -303,6 +303,31 @@ def flash_decode_fp8(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
       q, k_pages, v_pages, ks, vs)
 
 
+def hbm_bytes(batch: int, hkv: int, groups: int, head_dim: int,
+              seq: int, block_kv: int, bytes_per_elem: int = 2,
+              kv_bytes: int | None = None) -> int:
+    """Exact HBM traffic of one :func:`flash_decode` call (the grid's
+    actual block transfers; scalar-prefetch block tables and lengths are
+    excluded, as in :func:`oproj_hbm_bytes`).
+
+    The q and output blocks are (bi, h)-indexed — constant across the
+    KV-block grid dim, so each moves once per (batch, kv-head) row; the
+    K/V pages stream once per row.  ``kv_bytes`` gives the paged K/V
+    streams their own width (fp8 cache: 1); the fp8 variant additionally
+    fetches the two per-head fp32 dequant scales once per row change.
+    """
+    nb = -(-seq // block_kv)
+    kvb = bytes_per_elem if kv_bytes is None else kv_bytes
+    q_bytes = batch * hkv * groups * head_dim * bytes_per_elem
+    kv = 2 * batch * hkv * nb * block_kv * head_dim * kvb
+    out = batch * hkv * groups * head_dim * bytes_per_elem
+    total = q_bytes + kv + out
+    if kv_bytes is not None:
+        # (h, 0)-indexed scale scalars: refetched when h changes
+        total += 2 * 4 * (batch * hkv if hkv > 1 else 1)
+    return total
+
+
 def oproj_vmem_bytes_required(block_kv: int, groups: int, head_dim: int,
                               d_model: int,
                               bytes_per_elem: int = 2) -> int:

@@ -35,6 +35,35 @@ def vmem_bytes_required(bm: int, bk: int, bn: int,
     return streamed + resident
 
 
+def hbm_bytes(M: int, N: int, K: int, bm: int, bk: int, bn: int,
+              bytes_per_elem: int = 2, w_bytes: int | None = None) -> int:
+    """Exact HBM traffic of one :func:`matmul_blocked` call, in bytes.
+
+    Counts the grid's block transfers under Pallas DMA elision: a block
+    is refetched only when consecutive grid steps map it to a *different*
+    block index.  With grid (M/bm, N/bn, K/bk), k minor-most:
+
+    * the A block ``(i, kk)`` is refetched for every j-column — unless
+      the reduction is a single block (``gk == 1``), when its index is
+      constant across j and each A block moves once;
+    * the B block ``(kk, j)`` changes every step, so the whole of B moves
+      per i-row — unless B is a single block in both k and n, when it
+      moves exactly once;
+    * each output block is written once, at the last reduction step.
+
+    ``w_bytes`` gives the B stream its own element width (int8 weights).
+    The dims/tiles convention matches the ``"matmul"``/``"matmul_dgrad"``
+    schedule keys, so the dgrad kernels (same streamed-operands layout,
+    reduction minor-most) share this accounting verbatim.
+    """
+    gm, gn, gk = M // bm, N // bn, K // bk
+    wb = bytes_per_elem if w_bytes is None else w_bytes
+    a = M * K * bytes_per_elem * (gn if gk > 1 else 1)
+    b = K * N * wb * (gm if (gk > 1 or gn > 1) else 1)
+    out = M * N * bytes_per_elem
+    return a + b + out
+
+
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():

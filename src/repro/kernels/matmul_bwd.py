@@ -27,12 +27,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.matmul_blocked import vmem_bytes_required
+from repro.kernels.matmul_blocked import hbm_bytes, vmem_bytes_required
 
-__all__ = ["matmul_dgrad_a", "matmul_dgrad_b", "vmem_bytes_required"]
+__all__ = ["matmul_dgrad_a", "matmul_dgrad_b", "hbm_bytes",
+           "vmem_bytes_required"]
 
 # dgrad tiles stream two operand blocks and hold one fp32 accumulator,
-# exactly like the forward kernel: the footprint model is shared.
+# exactly like the forward kernel: the VMEM footprint model is shared,
+# and so is the exact HBM accounting — both nests stream their two read
+# operands with the reduction minor-most, so ``hbm_bytes`` applies with
+# the ``"matmul_dgrad"`` (M_out, N_out, K_reduce) dims convention.
 
 
 def _dgrad_a_kernel(g_ref, b_ref, o_ref, acc_ref, *, n_r: int):

@@ -66,19 +66,21 @@ def hbm_bytes(M: int, N: int, K: int, bm: int, bk: int, bn: int,
     This is not a model estimate: it counts the blocks the grid
     actually transfers (Pallas skips a DMA only when consecutive grid
     steps map to the same block — with k minor-most that elides the
-    output across the reduction and nothing else).  The benchmark's
-    "measured DRAM bytes" column is this number for the executed
-    schedule; ``tune.predicted_dram_bytes`` is the model's.
+    output across the reduction, the A stream when the reduction is a
+    single block, and the (i, j)-indexed epilogue tiles across k).  The
+    benchmark's "measured DRAM bytes" column is this number for the
+    executed schedule; ``tune.predicted_dram_bytes`` is the model's.
     """
+    from repro.kernels.matmul_blocked import hbm_bytes as gemm_bytes
     gm, gn = M // bm, N // bn
-    wb = w_bytes or bytes_per_elem
-    total = M * K * bytes_per_elem * gn          # A refetched per j
-    total += K * N * wb * gm                     # W refetched per i
-    total += M * N * bytes_per_elem              # output written once
+    total = gemm_bytes(M, N, K, bm, bk, bn, bytes_per_elem, w_bytes)
+    # (0, j)-indexed fp32 rows: constant across k, refetched per i-row
+    # only when the row actually changes between i-rows (gn > 1)
+    row = N * 4 * (gm if gn > 1 else 1)
     if w_bytes is not None:
-        total += N * 4 * gm                      # scale row per i-block
+        total += row                             # dequant scale row
     if has_bias:
-        total += N * 4 * gm
+        total += row
     if has_mul:
         total += M * N * bytes_per_elem
     if has_residual:

@@ -41,6 +41,19 @@ def vmem_bytes_required(bm: int, bk: int, bn: int,
     return streamed + resident + scale_row
 
 
+def hbm_bytes(M: int, N: int, K: int, bm: int, bk: int, bn: int,
+              a_bytes: int = 2, w_bytes: int = 1) -> int:
+    """Exact HBM traffic of one :func:`matmul_w8` call: the elision-aware
+    GEMM block transfers with a ``w_bytes``-wide weight stream
+    (``matmul_blocked.hbm_bytes``) plus the fp32 dequant-scale row, which
+    is (0, j)-indexed like a fused bias and moves once per i-row only
+    when the row changes between i-rows."""
+    from repro.kernels.matmul_blocked import hbm_bytes as gemm_bytes
+    gm, gn = M // bm, N // bn
+    total = gemm_bytes(M, N, K, bm, bk, bn, a_bytes, w_bytes)
+    return total + N * 4 * (gm if gn > 1 else 1)
+
+
 def _matmul_w8_kernel(a_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():

@@ -163,8 +163,17 @@ def fused_ops(enable: bool = True):
 def _kernels_on(use_kernel: bool | None) -> bool:
     """Fused kernels run on TPU by default; off-TPU the jnp oracle IS
     the fused semantics (XLA fuses the epilogue) without paying the
-    Pallas interpreter — same policy as ``paged_attention``."""
+    Pallas interpreter — same policy as ``paged_attention``.
+
+    ``REPRO_FORCE_KERNELS=1`` forces the kernel paths (interpret mode
+    off-TPU) — the profiler sets it so every hot-path op resolves its
+    schedule through the tuner and dispatches the grid whose transfers
+    ``kernels.*.hbm_bytes`` accounts; forced runs are for attribution,
+    not throughput.
+    """
     if use_kernel is None:
+        if os.environ.get("REPRO_FORCE_KERNELS") == "1":
+            return True
         return jax.default_backend() == "tpu"
     return use_kernel
 

@@ -41,12 +41,15 @@ def hbm_bytes(M: int, Nkv: int, K: int, groups: int,
               bm: int, bk: int, bn: int,
               bytes_per_elem: int = 2) -> int:
     """Exact HBM traffic of one :func:`qkv_fused` call (the grid's
-    actual block transfers; see ``matmul_fused.hbm_bytes``).  The
-    unfused baseline is three GEMM calls, each re-streaming A."""
-    gn = Nkv // bn
+    actual block transfers under DMA elision; see
+    ``matmul_blocked.hbm_bytes``).  The unfused baseline is three GEMM
+    calls, each re-streaming A."""
+    gm, gn, gk = M // bm, Nkv // bn, K // bk
     cols = (groups + 2) * Nkv
-    total = M * K * bytes_per_elem * gn          # A: ONCE per j sweep
-    total += K * cols * bytes_per_elem * (M // bm)   # all three weights
+    # A: once per j sweep, elided to once total when gk == 1
+    total = M * K * bytes_per_elem * (gn if gk > 1 else 1)
+    # all three weight streams: per i-row unless a single (j, k) block
+    total += K * cols * bytes_per_elem * (gm if (gk > 1 or gn > 1) else 1)
     total += M * cols * bytes_per_elem           # q, k, v written once
     return total
 

@@ -21,6 +21,7 @@ from repro.configs import get_config, get_reduced
 from repro.data.pipeline import make_batch
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.sharding import set_axis_mapping
+from repro.obs import Obs, format_metrics
 from repro.optim.adamw import AdamWConfig
 from repro.train.loop import TrainConfig, train
 
@@ -45,6 +46,17 @@ def main() -> None:
     ap.add_argument("--restore", choices=["auto", "none"], default="none")
     ap.add_argument("--production-mesh", action="store_true",
                     help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the metrics snapshot (train gauges + "
+                         "modeled-vs-measured DRAM report) as JSON — the "
+                         "same flag serving has (docs/observability.md)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace span timeline of every "
+                         "train step (step/grad/checkpoint spans + "
+                         "loss/throughput counter tracks)")
+    ap.add_argument("--miss-log", metavar="PATH", default=None,
+                    help="append schedule-cache misses as JSONL tuning "
+                         "targets (meaningful with --blocked-kernels)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -66,10 +78,23 @@ def main() -> None:
         for step in range(args.steps):
             yield make_batch(cfg, args.seq_len, args.batch, step)
 
+    obs = Obs(trace=args.trace, miss_log=args.miss_log)
     with mesh:
-        result = train(cfg, tc, batches(), restore=args.restore == "auto")
+        result = train(cfg, tc, batches(), restore=args.restore == "auto",
+                       obs=obs)
     print(f"final loss: {result['history'][-1]:.4f} "
           f"(start {result['history'][0]:.4f})")
+    if args.metrics_out:
+        obs.write_metrics(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+        snap = obs.snapshot()
+        print(format_metrics({"train": snap.get("train", {})}))
+    if args.trace:
+        print(f"chrome trace -> {args.trace}")
+    if args.miss_log:
+        print(f"schedule-cache miss log -> {args.miss_log} "
+              "(replay: python -m repro.tune --from-telemetry)")
+    obs.close()
 
 
 if __name__ == "__main__":

@@ -24,12 +24,13 @@ import os
 from repro.obs.dram import DramLedger, read_miss_log
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                format_metrics, hist_quantile)
+from repro.obs.profile import KernelProfiler, kernel_hbm_bytes
 from repro.obs.trace import NULL_SPAN, StepTracer, null_span
 
 __all__ = [
-    "Counter", "DramLedger", "Gauge", "Histogram", "MetricsRegistry",
-    "NULL_SPAN", "Obs", "StepTracer", "format_metrics", "hist_quantile",
-    "null_span", "read_miss_log",
+    "Counter", "DramLedger", "Gauge", "Histogram", "KernelProfiler",
+    "MetricsRegistry", "NULL_SPAN", "Obs", "StepTracer", "format_metrics",
+    "hist_quantile", "kernel_hbm_bytes", "null_span", "read_miss_log",
 ]
 
 

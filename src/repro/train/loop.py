@@ -113,9 +113,20 @@ class StepWatchdog:
 
 def train(cfg: ModelConfig, tc: TrainConfig, batches, *,
           params=None, rng=None, restore: bool = False,
-          log=print) -> dict:
+          log=print, obs=None) -> dict:
     """Single-host training driver (examples use this; launch/train.py
-    wraps it with the mesh)."""
+    wraps it with the mesh).
+
+    ``obs`` (an :class:`repro.obs.Obs` bundle, optional) gets the same
+    telemetry the serving engines emit: ``train.loss`` /
+    ``train.tokens_per_s`` gauges and a ``train.step_us`` histogram in
+    the registry, ``step``/``grad``/``checkpoint`` spans plus a
+    throughput counter track in the tracer, and — with
+    ``blocked_linear`` — every projection's schedule resolution in the
+    DRAM ledger under the ``train_step`` scope.  The loop already
+    fences every step on the loss, so spans time device work with or
+    without a tracer attached.
+    """
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     if params is None:
         params = T.init_params(cfg, rng)
@@ -129,23 +140,59 @@ def train(cfg: ModelConfig, tc: TrainConfig, batches, *,
             params, opt_state = state["params"], state["opt"]
             log(f"restored checkpoint at step {start_step}")
 
+    if obs is not None:
+        from repro.obs import null_span
+        span = obs.tracer.span if obs.tracer is not None else null_span
+        g_loss = obs.registry.gauge("train.loss")
+        g_tps = obs.registry.gauge("train.tokens_per_s")
+        h_step = obs.registry.histogram("train.step_us")
+        c_steps = obs.registry.counter("train.steps")
+
     step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
     watchdog = StepWatchdog(tc.straggler_factor)
     history = []
     for step, batch in enumerate(batches, start=start_step):
         t0 = time.perf_counter()
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        jax.block_until_ready(metrics["loss"])
+        if obs is not None:
+            with span(f"step {step}", cat="train",
+                      args={"step": step}):
+                with span("grad", cat="train"), \
+                        obs.dram.scope("train_step"):
+                    params, opt_state, metrics = step_fn(
+                        params, opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         slow = watchdog.observe(step, dt)
+        if obs is not None:
+            tok = batch.get("tokens") if isinstance(batch, dict) else None
+            tokens = (tok.size if tok is not None else
+                      max((x.size for x in jax.tree.leaves(batch)), default=0))
+            tps = tokens / dt if dt > 0 else 0.0
+            g_loss.set(float(metrics["loss"]))
+            g_tps.set(round(tps, 1))
+            h_step.observe(dt * 1e6)
+            c_steps.inc()
+            obs.dram.end_step()
+            if obs.tracer is not None:
+                obs.tracer.counter("train", {"loss": float(metrics["loss"]),
+                                             "tokens_per_s": tps})
         if step % tc.log_every == 0 or slow:
             log(f"step {step:5d} loss {float(metrics['loss']):.4f} "
                 f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
                 f"{dt*1e3:.0f}ms" + ("  [STRAGGLER]" if slow else ""))
         history.append(float(metrics["loss"]))
         if tc.ckpt_dir and (step + 1) % tc.ckpt_every == 0:
-            ckpt.save_async(tc.ckpt_dir, step + 1,
-                            {"params": params, "opt": opt_state})
+            if obs is not None:
+                with span("checkpoint", cat="train",
+                          args={"step": step + 1}):
+                    ckpt.save_async(tc.ckpt_dir, step + 1,
+                                    {"params": params, "opt": opt_state})
+            else:
+                ckpt.save_async(tc.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state})
     ckpt.wait_async()
     return {"params": params, "opt": opt_state, "history": history,
             "straggler_flags": watchdog.flags}

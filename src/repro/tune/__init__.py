@@ -23,6 +23,7 @@ import functools
 from repro.core.tpu_adapter import TPU_V5E, TpuTarget
 from repro.tune.cache import ScheduleCache, default_cache_path, device_kind
 from repro.tune.lowering import (candidates, divides, fits_vmem,
+                                 level0_dram_bytes,
                                  predicted_dram_accesses,
                                  predicted_dram_bytes,
                                  schedule_to_string, vmem_budget)
@@ -31,11 +32,28 @@ from repro.tune.schedule import OpSpec, Schedule
 __all__ = [
     "OpSpec", "Schedule", "ScheduleCache", "best_schedule", "candidates",
     "default_cache_path", "describe_candidates", "device_kind",
+    "level0_dram_bytes",
     "predicted_dram_accesses", "predicted_dram_bytes",
-    "schedule_to_string", "set_schedule_observer", "tune_op",
+    "schedule_to_string", "set_default_cache", "set_schedule_observer",
+    "tune_op",
 ]
 
 _default_cache = ScheduleCache()
+
+
+def set_default_cache(cache: ScheduleCache) -> ScheduleCache:
+    """Swap the process-wide schedule cache; returns the previous one.
+
+    The profiler's ``--corrupt`` fault injection uses this to plant a
+    deliberately bad cached schedule and watch the fidelity gate catch
+    it; tests use it to isolate cache state.  Also drops the analytic
+    memo so the swap is visible to ops already traced once.
+    """
+    global _default_cache
+    prev = _default_cache
+    _default_cache = cache
+    _derive.cache_clear()
+    return prev
 
 # Telemetry tap (repro.obs): one process-wide callable notified of every
 # best_schedule resolution with ``(spec, schedule)``.  The observer runs

@@ -253,6 +253,114 @@ def predicted_dram_bytes(spec: OpSpec, tiles: tuple[int, ...],
                           operand_weights=weights)[levels[-1].name]
 
 
+def _operand_level0_traffic(s: BlockingString, op, footprint: int) -> int:
+    """Parent-side traffic (elements) of the outermost model buffer that
+    fits the kernel's level-0 tile footprint for this operand.
+
+    This is where the model and the kernel meet: a Pallas kernel holds
+    exactly one level-0 block per operand in VMEM, so the DRAM-boundary
+    traffic it generates is the fills+writebacks of the *largest* model
+    buffer no bigger than that block — including the degenerate pos=-1
+    register when no placed buffer fits (a streamed operand with no
+    reuse), whose parent traffic is the full compulsory stream.
+    """
+    from repro.core.access import analyze
+    from repro.core.buffers import buffers_by_operand, place_buffers
+    rep = analyze(s)
+    chain = buffers_by_operand(place_buffers(s))[op]     # inner -> outer
+    fitting = [b for b in chain if b.size_elems <= footprint]
+    pick = fitting[-1]
+    for bt in rep.per_buffer:
+        if bt.buffer.name == pick.name and bt.buffer.operand is op:
+            return bt.parent_traffic
+    raise KeyError(pick.name)
+
+
+def _level0_footprints(s: BlockingString) -> dict:
+    """Level-0 tile footprint (elements) per operand, read off the
+    innermost extent of each dim in the blocking string."""
+    from repro.core.buffers import OPERAND_DIMS, Operand
+    inner: dict[Dim, int] = {}
+    for loop in s.loops:
+        inner.setdefault(loop.dim, loop.extent)
+    out = {}
+    for op in Operand:
+        fp = 1
+        for d in OPERAND_DIMS[op]:
+            fp *= inner.get(d, 1)
+        out[op] = fp
+    return out
+
+
+def level0_dram_bytes(spec: OpSpec, tiles: tuple[int, ...]) -> int:
+    """The blocking model's level-0 HBM traffic (bytes) for the exact
+    nest(s) the kernel executes with ``tiles`` — no finite-VMEM packing,
+    no spill: per operand, the parent traffic of the outermost placed
+    buffer that fits the kernel's level-0 block.
+
+    This is the model-side half of the kernel-vs-model byte-agreement
+    property (``tests/test_profile.py``): on exact-divisor shapes it
+    equals the kernels' exported ``hbm_bytes`` bit for bit, because both
+    count the same thing — the Pallas grid's block transfers under DMA
+    elision.  Covers the GEMM family (incl. the fused/quantized
+    variants' base streams) and ``flash_decode``; the conv nests carry
+    halo refetch terms the kernels account for directly.
+    """
+    from repro.core.buffers import Operand, operand_bytes
+    if not divides(spec, tiles):
+        raise ValueError(
+            f"tiles {tiles} do not divide {spec.op} dims {spec.dims}")
+    if spec.op in ATTN_OPS:
+        return _flash_decode_level0_bytes(spec, tiles)
+    if spec.op not in GEMM_OPS and spec.op != "qkv_fused":
+        raise ValueError(
+            f"level0_dram_bytes covers the GEMM family and flash_decode, "
+            f"not {spec.op!r}")
+    s = schedule_to_string(spec, tiles)
+    fps = _level0_footprints(s)
+    return sum(_operand_level0_traffic(s, op, fps[op])
+               * operand_bytes(s.problem, op) for op in Operand)
+
+
+def _flash_decode_level0_bytes(spec: OpSpec, tiles: tuple[int, ...]) -> int:
+    """Two-nest decomposition of the decode-attention kernel.
+
+    The single-GEMM stand-in the tuner ranks with (INPUT = the G x S
+    score matrix) cannot describe the kernel's real streams — the score
+    block lives only in VMEM.  The kernel is two chained GEMMs sharing
+    the KV block loop: ``scores = q @ K^T`` (count q and K; the score
+    output is the VMEM intermediate) and ``out = P @ V`` (count V and
+    the output; P is the same intermediate).  Per (batch, kv-head) row;
+    scalar-prefetch block tables/lengths are excluded, matching the
+    kernel's ``hbm_bytes``.
+    """
+    from repro.core.buffers import Operand, operand_bytes
+    from repro.core.loopnest import Problem
+    G, S, D = spec.dims
+    (bkv,) = tiles
+    kvb = NARROW_WEIGHT_BYTES.get(spec.op)
+    p1 = Problem.gemm(M=G, N_cols=S, K_reduce=D,
+                      bytes_per_elem=spec.itemsize, weight_bytes=kvb)
+    s1 = BlockingString([Loop(Dim.C, D), Loop(Dim.X, G), Loop(Dim.K, bkv),
+                         Loop(Dim.C, D), Loop(Dim.K, S), Loop(Dim.X, G)],
+                        p1)
+    p2 = Problem.gemm(M=G, N_cols=D, K_reduce=S,
+                      bytes_per_elem=spec.itemsize, weight_bytes=kvb)
+    s2 = BlockingString([Loop(Dim.C, bkv), Loop(Dim.X, G), Loop(Dim.K, D),
+                         Loop(Dim.C, S), Loop(Dim.K, D), Loop(Dim.X, G)],
+                        p2)
+    total = 0
+    for s, counted in ((s1, (Operand.INPUT, Operand.WEIGHT)),
+                       (s2, (Operand.WEIGHT, Operand.OUTPUT))):
+        fps = _level0_footprints(s)
+        for op in counted:
+            total += _operand_level0_traffic(s, op, fps[op]) \
+                * operand_bytes(s.problem, op)
+    if spec.op == "flash_decode_fp8":
+        total += 2 * 4        # per-head dequant scale scalars, one row
+    return total
+
+
 def candidates(spec: OpSpec,
                vmem_budget_bytes: int | None = None,
                target: TpuTarget = TPU_V5E,

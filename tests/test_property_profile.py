@@ -1,0 +1,114 @@
+"""Property tests (hypothesis): kernel grid-transfer accounting equals the
+core blocking model's level-0 traffic.
+
+Every kernel in ``repro.kernels`` exports ``hbm_bytes`` — the block
+transfers its Pallas grid issues, DMA elision included.  The profiler
+(``repro.obs.profile``) prices dispatches through those formulas; the
+tuner ranks candidates through the core model.  These tests pin the two
+accountings to each other exactly: on any exact-divisor (shape, tile)
+pair, ``kernel_hbm_bytes(spec, tiles)`` must equal
+``tune.level0_dram_bytes(spec, tiles)`` bit for bit — across the GEMM
+family, the fused qkv projection, and decode attention, in both wide
+and narrow dtypes.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.profile import kernel_hbm_bytes
+from repro.tune import level0_dram_bytes
+from repro.tune.schedule import OpSpec
+
+
+def _divisors(n: int, lo: int = 8) -> list[int]:
+    return [d for d in range(lo, n + 1) if n % d == 0]
+
+
+_SIZES = [64, 128, 256, 512]
+
+
+@st.composite
+def gemm_case(draw):
+    op = draw(st.sampled_from(
+        ["matmul", "matmul_dgrad", "matmul_fused", "matmul_w8"]))
+    M = draw(st.sampled_from(_SIZES))
+    N = draw(st.sampled_from(_SIZES))
+    K = draw(st.sampled_from(_SIZES))
+    dtype = draw(st.sampled_from(["float32", "bfloat16"]))
+    tiles = (draw(st.sampled_from(_divisors(M))),
+             draw(st.sampled_from(_divisors(K))),
+             draw(st.sampled_from(_divisors(N))))
+    return OpSpec(op, (M, N, K), dtype=dtype), tiles
+
+
+@settings(max_examples=80, deadline=None)
+@given(case=gemm_case())
+def test_gemm_kernel_bytes_equal_model_level0(case):
+    """INVARIANT: for every GEMM-family op on exact-divisor tiles, the
+    kernel's grid-transfer count == the model's level-0 DRAM traffic.
+    (matmul_w8 streams one extra fp32 scale row per N-block pass — an
+    implementation detail outside the model's operand set, subtracted.)"""
+    spec, tiles = case
+    kb = kernel_hbm_bytes(spec, tiles)
+    assert kb is not None
+    if spec.op == "matmul_w8":
+        M, N, K = spec.dims
+        bm, _, bn = tiles
+        gm, gn = M // bm, N // bn
+        kb -= N * 4 * (gm if gn > 1 else 1)
+    assert kb == level0_dram_bytes(spec, tiles)
+
+
+@st.composite
+def qkv_case(draw):
+    G = draw(st.sampled_from([2, 4, 8]))
+    Nkv = draw(st.sampled_from([32, 64, 128]))
+    M = draw(st.sampled_from([64, 128, 256]))
+    K = draw(st.sampled_from([128, 256, 512]))
+    dtype = draw(st.sampled_from(["float32", "bfloat16"]))
+    tiles = (draw(st.sampled_from(_divisors(M))),
+             draw(st.sampled_from(_divisors(K))),
+             draw(st.sampled_from(_divisors(Nkv))))
+    return OpSpec("qkv_fused", (M, Nkv, K, G), dtype=dtype), tiles
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=qkv_case())
+def test_qkv_fused_kernel_bytes_equal_model_level0(case):
+    spec, tiles = case
+    kb = kernel_hbm_bytes(spec, tiles)
+    assert kb is not None
+    assert kb == level0_dram_bytes(spec, tiles)
+
+
+@st.composite
+def decode_case(draw):
+    op = draw(st.sampled_from(["flash_decode", "flash_decode_fp8"]))
+    G = draw(st.sampled_from([1, 4, 8]))
+    S = draw(st.sampled_from([512, 1024, 2048]))
+    D = draw(st.sampled_from([64, 128]))
+    dtype = draw(st.sampled_from(["float32", "bfloat16"]))
+    bkv = draw(st.sampled_from(_divisors(S, lo=32)))
+    return OpSpec(op, (G, S, D), dtype=dtype), (bkv,)
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=decode_case())
+def test_flash_decode_kernel_bytes_equal_model_level0(case):
+    """Decode attention decomposes into two chained nests (scores = q@K^T,
+    out = P@V); the model prices each and the sum must match the kernel's
+    single-grid accounting, including the fp8 variant's per-nest scale
+    scalars."""
+    spec, tiles = case
+    kb = kernel_hbm_bytes(spec, tiles)
+    assert kb is not None
+    assert kb == level0_dram_bytes(spec, tiles)
+
+
+def test_nondividing_tiles_are_rejected_symmetrically():
+    spec = OpSpec("matmul", (128, 128, 128))
+    assert kernel_hbm_bytes(spec, (96, 64, 64)) is None
+    with pytest.raises(ValueError):
+        level0_dram_bytes(spec, (96, 64, 64))
