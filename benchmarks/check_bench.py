@@ -66,10 +66,40 @@ COMMITTED = os.path.join(REPO, "BENCH_serve.json")
 COMMITTED_KERNELS = os.path.join(REPO, "BENCH_kernels.json")
 
 
-def _records(path: str) -> dict[str, dict]:
-    with open(path) as f:
-        doc = json.load(f)
-    return {r["name"]: r for r in doc["records"]}
+def _records(path: str, role: str) -> dict[str, dict]:
+    """Load a trajectory file, dying with an actionable message (not a
+    traceback) when it is missing or malformed — the first thing a
+    fresh checkout or a broken CI artifact hits."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        sys.exit(
+            f"check_bench: {role} file {path!r} does not exist.\n"
+            f"  fresh file:     generate with `python -m "
+            f"benchmarks.serve_bench --smoke --json <path>` (or "
+            f"kernel_bench --json with --kernels)\n"
+            f"  committed file: commit one with `check_bench --fresh "
+            f"<path> --update`, or point --committed at it")
+    except json.JSONDecodeError as e:
+        sys.exit(
+            f"check_bench: {role} file {path!r} is not valid JSON "
+            f"({e}).\n  regenerate it — a truncated file usually means "
+            f"the benchmark run was interrupted before write_json ran")
+    if not isinstance(doc, dict) or "records" not in doc:
+        sys.exit(
+            f"check_bench: {role} file {path!r} has no 'records' "
+            f"field — it is not a benchmark trajectory file.  Expected "
+            f"the JSON written by serve_bench/kernel_bench --json")
+    recs = {}
+    for r in doc["records"]:
+        if "name" not in r:
+            sys.exit(
+                f"check_bench: {role} file {path!r} has a record "
+                f"without a 'name' field — regenerate it with the "
+                f"current benchmark code")
+        recs[r["name"]] = r
+    return recs
 
 
 def _speedup(recs: dict[str, dict], name: str,
@@ -79,11 +109,16 @@ def _speedup(recs: dict[str, dict], name: str,
 
 # reuse-workload records: not comparable to the serve_static baseline
 PREFIX_SECTION = ("serve_paged_prefix", "serve_paged_noshare")
+# pressure-workload record: not comparable to serve_static either; its
+# scheduling counters are host-deterministic and exact-matched
+PREEMPT_SECTION = "serve_paged_preempt"
+PREEMPT_EXACT_FIELDS = ("preemptions", "restored_requests",
+                        "admitted_tokens_saved")
 
 
 def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
-    fresh = _records(fresh_path)
-    committed = _records(committed_path)
+    fresh = _records(fresh_path, "fresh")
+    committed = _records(committed_path, "committed")
     failures: list[str] = []
 
     missing = sorted(set(committed) - set(fresh))
@@ -108,7 +143,7 @@ def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
                 failures.append(f"{name}: field {field!r} missing")
     for name in committed:
         if name == "serve_static" or name in PREFIX_SECTION \
-                or name not in fresh:
+                or name == PREEMPT_SECTION or name not in fresh:
             continue
         ref_x = _speedup(committed, name)
         got_x = _speedup(fresh, name)
@@ -156,6 +191,37 @@ def check(fresh_path: str, committed_path: str, tolerance: float) -> int:
                 f"serve_paged_prefix: cache_hit_rate {hr} != committed "
                 f"{ref.get('cache_hit_rate')}")
 
+    # preemption/restore section: the whole point is the counters —
+    # restored requests must exist and must have replayed only their
+    # unshared tail, and the host-side scheduling that produces those
+    # numbers is deterministic, so they exact-match the baseline
+    if PREEMPT_SECTION in committed and PREEMPT_SECTION in fresh:
+        got = fresh[PREEMPT_SECTION]
+        ref = committed[PREEMPT_SECTION]
+        for field in PREEMPT_EXACT_FIELDS:
+            if field not in ref:
+                continue
+            if got.get(field) != ref[field]:
+                failures.append(
+                    f"{PREEMPT_SECTION}: {field} {got.get(field)} != "
+                    f"committed {ref[field]} — preempt/restore "
+                    f"scheduling changed semantics; rerun with "
+                    f"--update if intentional")
+        if not got.get("preemptions", 0) > 0:
+            failures.append(
+                f"{PREEMPT_SECTION}: preemptions is 0 — the pressure "
+                f"workload never forced a preemption")
+        if not got.get("admitted_tokens_saved", 0) > 0:
+            failures.append(
+                f"{PREEMPT_SECTION}: admitted_tokens_saved is 0 — "
+                f"restores replayed everything instead of only the "
+                f"unshared tail")
+        print(f"{PREEMPT_SECTION}: preemptions="
+              f"{got.get('preemptions')} restored="
+              f"{got.get('restored_requests')} saved="
+              f"{got.get('admitted_tokens_saved')}tok "
+              f"{'ok' if not any(PREEMPT_SECTION in f for f in failures) else 'FAILED'}")
+
     if failures:
         print("\nbenchmark regression guard FAILED:", file=sys.stderr)
         for f in failures:
@@ -175,8 +241,8 @@ KERNEL_EXACT_FIELDS = ("measured_fused_bytes", "measured_unfused_bytes",
 
 
 def check_kernels(fresh_path: str, committed_path: str) -> int:
-    fresh = _records(fresh_path)
-    committed = _records(committed_path)
+    fresh = _records(fresh_path, "fresh")
+    committed = _records(committed_path, "committed")
     failures: list[str] = []
 
     missing = sorted(set(committed) - set(fresh))
@@ -221,9 +287,33 @@ def check_kernels(fresh_path: str, committed_path: str) -> int:
     return 0
 
 
+def list_guarded_fields() -> None:
+    """Print every field the guard looks at, per record class — the
+    answer to "what will make this fail?" without reading the source."""
+    print("serving guard (BENCH_serve.json):")
+    print("  every record:     useful_tokens (exact), and any of "
+          "tok_s/p50_us/p95_us/p99_us the committed record carries "
+          "(presence only)")
+    print("  paged records:    tok_s ratio vs serve_static within "
+          "--tolerance (except the sections below)")
+    print(f"  {'/'.join(PREFIX_SECTION)}:")
+    print("                    pair tok_s ratio, admitted_tokens_saved "
+          "(exact), cache_hit_rate (>0, ±0.001)")
+    print(f"  {PREEMPT_SECTION}:")
+    print(f"                    {', '.join(PREEMPT_EXACT_FIELDS)} "
+          f"(exact); preemptions > 0; admitted_tokens_saved > 0")
+    print("kernel guard (BENCH_kernels.json, --kernels):")
+    print(f"  every record:     {', '.join(KERNEL_EXACT_FIELDS)} (exact)")
+    print("  fresh run:        measured_fused_bytes < "
+          "measured_unfused_bytes")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True, metavar="PATH",
+    ap.add_argument("--list", action="store_true",
+                    help="print the guarded fields per record class "
+                         "and exit")
+    ap.add_argument("--fresh", metavar="PATH",
                     help="JSON written by a fresh serve_bench --smoke "
                          "--json (or, with --kernels, kernel_bench "
                          "--json) run")
@@ -242,6 +332,12 @@ def main() -> None:
                     help="replace the committed baseline with the fresh "
                          "run instead of checking")
     args = ap.parse_args()
+    if args.list:
+        list_guarded_fields()
+        return
+    if not args.fresh:
+        ap.error("--fresh is required (or use --list to see what the "
+                 "guard checks)")
     committed = args.committed or \
         (COMMITTED_KERNELS if args.kernels else COMMITTED)
     if args.update:

@@ -197,6 +197,11 @@ def main() -> None:
     ap.add_argument("--reuse-hint", type=float, default=0.5,
                     help="reuse rate fed to the share-vs-stream "
                          "page-size pricing for the sharing engine")
+    ap.add_argument("--preempt", action="store_true",
+                    help="also run a preemption/restore section: a "
+                         "starved high-priority arrival preempts a "
+                         "low-priority hog, whose restore replays only "
+                         "the unshared tail (docs/robustness.md)")
     ap.add_argument("--spec", type=int, default=2,
                     help="draft tokens per speculative decode step for "
                          "the paged engine (0 -> off)")
@@ -367,6 +372,63 @@ def main() -> None:
              tok_s=round(sh_tps, 2), **h_lat_f,
              useful_tokens=int(sh_useful),
              metrics=share.obs.snapshot(), **pf)
+
+    if args.preempt:
+        # preemption/restore section (docs/robustness.md): its own tiny
+        # fixed workload — two low-priority hogs saturate both slots and
+        # most of a deliberately small page pool, then a high-priority
+        # arrival starves until the aging rule fires preemption.  The
+        # victim's complete pages go into the prefix tree, so its
+        # restore prefix-matches them and replays only the unshared
+        # tail; every counter below is host-side deterministic (exact
+        # in check_bench), and the outputs must be byte-identical to an
+        # unpressured engine.  NOT comparable to serve_static.
+        rng = np.random.default_rng(5)
+        pe_prompts = [rng.integers(0, cfg.vocab, (12,), dtype=np.int32)
+                      for _ in range(2)]
+        pe_prompts.append(rng.integers(0, cfg.vocab, (17,),
+                                       dtype=np.int32))
+        pe_gens, pe_prios = [40, 40, 7], [0, 0, 1]
+
+        def run_prio(engine):
+            for p, g, pr in zip(pe_prompts, pe_gens, pe_prios):
+                engine.submit(p, g, priority=pr)
+            done, useful = {}, 0
+            t0 = time.perf_counter()
+            while engine.has_work:
+                for req in engine.step():
+                    done[req.rid] = req
+                    useful += req.emitted_total
+            return time.perf_counter() - t0, useful, done
+
+        ref_eng = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=64, max_batch=2, page_size=8, decode_chunk=4,
+            spec_decode=0))
+        _, _, ref_done = run_prio(ref_eng)
+        pre = PagedEngine(cfg, params, PagedServeConfig(
+            max_seq=64, max_batch=2, page_size=8, decode_chunk=4,
+            spec_decode=0, n_pages=17, prefix_cache=True, preempt=True))
+        pe_wall, pe_useful, pe_done = run_prio(pre)
+        assert pe_useful == sum(pe_gens), (pe_useful, sum(pe_gens))
+        for rid, req in pe_done.items():
+            np.testing.assert_array_equal(
+                req.output, ref_done[rid].output,
+                err_msg=f"rid {rid} diverged under preemption")
+        reg = pre.obs.registry
+        n_pre = reg.counter("sched.preemptions").value
+        restored = reg.counter("lifecycle.preempted_retried").value
+        saved = pre.prefix_stats()["tokens_saved"]
+        assert n_pre > 0, "preemption section never preempted"
+        assert saved > 0, "restore never matched the registered pages"
+        pe_tps = pe_useful / pe_wall
+        emit("serve_paged_preempt", pe_wall / max(pe_useful, 1) * 1e6,
+             f"{pe_tps:.1f} tok/s useful={pe_useful} "
+             f"preemptions={n_pre} restored={restored} "
+             f"saved={saved}tok (pressure workload, byte-exact)",
+             tok_s=round(pe_tps, 2), useful_tokens=int(pe_useful),
+             preemptions=int(n_pre), restored_requests=int(restored),
+             admitted_tokens_saved=int(saved),
+             metrics=pre.obs.snapshot())
 
     if args.metrics_out:
         paged.obs.write_metrics(args.metrics_out)

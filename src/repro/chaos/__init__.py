@@ -1,0 +1,28 @@
+"""Chaos/fault-injection harness for the paged serving stack.
+
+    # CI fast lane: seeded engine schedule + a handful of sim schedules
+    PYTHONPATH=src python -m repro.chaos --smoke
+
+    # the acceptance bar: 200 randomized fault schedules
+    PYTHONPATH=src python -m repro.chaos --schedules 200
+
+Injectors (:mod:`repro.chaos.inject`) sit at seams the production code
+already has — the page allocator, the step planner, the schedule cache,
+the engine's NaN guard — and the runner (:mod:`repro.chaos.runner`)
+drives randomized fault schedules while asserting the serving
+invariants: zero page leaks, refcount = owners + tree refs, every
+request terminal, survivors byte-exact.  See docs/robustness.md.
+"""
+
+from repro.chaos.inject import (CorruptScheduleCache, FlakyAllocator,
+                                PlanChaos)
+from repro.chaos.runner import engine_smoke, run_schedule, run_schedules
+
+__all__ = [
+    "CorruptScheduleCache",
+    "FlakyAllocator",
+    "PlanChaos",
+    "engine_smoke",
+    "run_schedule",
+    "run_schedules",
+]

@@ -78,6 +78,24 @@ def main() -> None:
                     help="expected prompt-reuse rate for the "
                          "share-vs-stream page-size pricing (only "
                          "with --prefix-cache)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="paged: per-request wall deadline in seconds; "
+                         "requests past it finish DEADLINE_EXCEEDED "
+                         "with whatever they emitted "
+                         "(docs/robustness.md)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="paged: allow preempt-with-restore when the "
+                         "waiting head starves (greedy only; restored "
+                         "requests replay only their unshared tail "
+                         "with --prefix-cache)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="paged: per-slot NaN/Inf logit guard — a "
+                         "poisoned request FAILs alone instead of "
+                         "wedging the batch")
+    ap.add_argument("--degrade", action="store_true",
+                    help="paged: graceful-degradation ladder driven by "
+                         "the metrics registry (no_spec -> small_chunk "
+                         "-> preempt)")
     ap.add_argument("--metrics-out", metavar="PATH", default=None,
                     help="write the metrics snapshot (registry + "
                          "modeled-vs-measured DRAM report) as JSON "
@@ -136,7 +154,8 @@ def main() -> None:
             prefill_chunk=None if args.prefill_chunk < 0
             else args.prefill_chunk,
             spec_decode=args.spec, prefix_cache=args.prefix_cache,
-            reuse_hint=args.reuse_hint), obs=obs)
+            reuse_hint=args.reuse_hint, preempt=args.preempt,
+            nan_guard=args.nan_guard, degrade=args.degrade), obs=obs)
         n_req = args.requests or args.batch
         lo = max(1, args.prompt_len // 2) if args.mixed_lens \
             else args.prompt_len
@@ -144,24 +163,45 @@ def main() -> None:
         prompts = [rng.integers(0, cfg.vocab, (int(L),), dtype=np.int32)
                    for L in lens]
         t0 = time.perf_counter()
-        out = engine.generate(prompts, args.gen)
+        try:
+            reqs = engine.generate(prompts, args.gen,
+                                   deadline_s=args.deadline or None,
+                                   return_requests=True)
+        except KeyboardInterrupt:
+            # Ctrl-C mid-generate: cancel everything, drain to terminal
+            # statuses (freeing every page), and still report what ran
+            print("\ninterrupted: draining in-flight requests ...")
+            engine.shutdown()
+            held = engine.scheduler.allocator.in_use()
+            print(format_metrics({"lifecycle": engine.lifecycle_stats()}))
+            print(f"page pool drained ({held} pages still held)")
+            finish_obs(engine)
+            return
         dt = time.perf_counter() - t0
-        tps = n_req * args.gen / dt
+        emitted = sum(r.emitted_total for r in reqs)
+        tps = emitted / dt
         print(f"paged engine: page={engine.page_size} "
               f"chunk={engine.prefill_chunk} spec={engine.spec} "
               f"slots={args.batch} requests={n_req}"
               + (" fused" if args.fuse else ""))
-        # every summary (spec, prefix cache, step latency) renders
-        # through the one metrics formatter — no bespoke f-strings
+        # every summary (spec, prefix cache, lifecycle, step latency)
+        # renders through the one metrics formatter — no bespoke
+        # f-strings
         sections = {}
         if engine.spec:
             sections["spec"] = engine.spec_stats()
         if engine.prefix_caching:
             sections["prefix_cache"] = engine.prefix_stats()
+        if args.deadline or args.preempt or args.nan_guard \
+                or args.degrade:
+            sections["lifecycle"] = engine.lifecycle_stats()
         if sections:
             print(format_metrics(sections))
-        print(f"generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
-        print("sample:", out[0, :16].tolist())
+        statuses = sorted({r.status.value for r in reqs})
+        print(f"generated {emitted} tokens over {n_req} requests in "
+              f"{dt:.2f}s ({tps:.1f} tok/s), statuses: "
+              f"{'/'.join(statuses)}")
+        print("sample:", reqs[0].output[:16].tolist())
         finish_obs(engine)
         return
 

@@ -33,32 +33,10 @@ import tempfile
 import time
 
 
-class CorruptScheduleCache:
-    """A schedule cache whose hits are deliberately pessimal.
-
-    For ops matching ``match`` it returns the analytic winner with every
-    halvable tile halved — still dividing, still runnable, but moving
-    strictly more HBM bytes (smaller blocks mean more refetch under the
-    grid's DMA elision).  Installed via ``tune.set_default_cache`` by
-    ``--corrupt`` to exercise the profiler's fidelity gate end to end.
-    """
-
-    def __init__(self, match: str):
-        self.match = match
-
-    def lookup(self, spec):
-        from repro import tune
-        if self.match not in spec.op:
-            return None
-        top = tune.candidates(spec)[0]
-        tiles = tuple(t // 2 if t % 2 == 0 and t > 8 else t
-                      for t in top.tiles)
-        if tiles == tuple(top.tiles) or not tune.divides(spec, tiles):
-            return None
-        return dataclasses.replace(top, tiles=tiles, source="cache")
-
-    def store(self, schedule):
-        pass
+# the --corrupt fault injector now lives with the rest of the chaos
+# harness; re-exported here because docs and tests imported it from
+# repro.profile since PR 9
+from repro.chaos.inject import CorruptScheduleCache  # noqa: F401,E402
 
 
 def main(argv=None) -> None:

@@ -38,6 +38,17 @@ never a page a live request owns.
 The decode step remains fully jitted — paged flash-decode attention,
 device-side sampling, and an on-device output buffer read back only when
 a request finishes.
+
+Every request leaves with a terminal :class:`~repro.serve.lifecycle.
+RequestStatus` (docs/robustness.md): deadlines/TTLs expire it,
+``cancel()`` truncates it, exhausted admission retries or the NaN/Inf
+logit guard (``nan_guard=True`` — per-slot isfinite tracking inside the
+jitted decode, failing only the poisoned slot) fail it, and under page
+exhaustion the scheduler can preempt it and restore it later through
+the prefix cache with byte-exact tokens.  A
+:class:`~repro.serve.lifecycle.DegradationController` (``degrade=True``)
+steps spec-decode off, shrinks the decode chunk, and finally enables
+preemption as pressure mounts.
 """
 
 from __future__ import annotations
@@ -56,6 +67,7 @@ from repro.models.config import ModelConfig
 from repro.obs import Obs
 from repro.obs.trace import null_span
 from repro.serve import kv_cache as KV
+from repro.serve.lifecycle import DegradationController, RequestStatus
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -184,6 +196,16 @@ class PagedServeConfig:
     #                                suspends backfill (anti-starvation)
     use_kernel: bool | None = None  # paged attention: None -> TPU only
     interpret: bool | None = None
+    # -- lifecycle / robustness (docs/robustness.md) -------------------------
+    nan_guard: bool = False        # per-slot non-finite logit detection:
+    #                                fails only the poisoned request, at the
+    #                                cost of one readback per decode chunk
+    preempt: bool = False          # preempt-with-restore when the waiting
+    #                                head starves (greedy only; rung 3 of
+    #                                the degradation ladder enables it too)
+    degrade: bool = False          # graceful-degradation ladder controller
+    max_retries: int | None = None  # admission probe failures before a
+    #                                 queued request is FAILED (None = never)
 
 
 def default_buckets(cfg: ModelConfig, max_seq: int) -> tuple[int, ...] | None:
@@ -278,6 +300,11 @@ class PagedEngine:
             raise ValueError(
                 "spec_decode is greedy-only: draft acceptance compares "
                 "against the argmax chain, which sampling would break")
+        if sc.preempt and sc.temperature > 0:
+            raise ValueError(
+                "preempt is greedy-only: restoring a preempted request "
+                "replays its tail deterministically, which sampling "
+                "would break (byte-exactness is the correctness bar)")
 
         # prefix caching needs the span machinery to resume prefill at
         # the matched boundary, so it gates exactly like chunked prefill
@@ -293,7 +320,10 @@ class PagedEngine:
                                    allocator, sc.max_seq,
                                    age_limit=sc.age_limit,
                                    prefix_cache=self.prefix_cache,
-                                   metrics=reg)
+                                   metrics=reg,
+                                   max_retries=sc.max_retries)
+        self.degrade = (DegradationController(reg, tracer=self.obs.tracer)
+                        if sc.degrade else None)
 
         b = sc.max_batch
         self._block_tables = jnp.zeros((b, self.max_blocks), jnp.int32)
@@ -304,6 +334,12 @@ class PagedEngine:
         self._rng = jax.random.PRNGKey(sc.seed)
         self._step_count = 0
         self._next_rid = 0
+        # chaos seam: added to every logit a slot produces (nan_guard
+        # reads it; the host mirror skips no-op device updates)
+        self._poison = jnp.zeros(b, jnp.float32)
+        self._poison_host = np.zeros(b, np.float64)
+        self._clock = time.monotonic_ns    # injectable for deterministic tests
+        self._sched_steps = 0              # TTL / expiry step counter
         self._joins: dict[int, Any] = {}           # bucket -> jitted join
         self._chunk_fns: dict[int, Any] = {}       # span width -> chunk fn
         self._fork_fn: Any = None                  # jitted CoW page copy
@@ -322,16 +358,88 @@ class PagedEngine:
         self._m_prefix_lookups = reg.counter("prefix_cache.lookups")
         self._m_prefix_hits = reg.counter("prefix_cache.hits")
         self._m_prefix_saved = reg.counter("prefix_cache.tokens_saved")
+        self._m_status = {s: reg.counter(f"lifecycle.{s.value}")
+                          for s in RequestStatus}
+        self._m_nan_trips = reg.counter("lifecycle.nan_guard_trips")
 
     # -- request API ----------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
-        """Enqueue one prompt; returns the request id."""
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
+               priority: int = 0, deadline_s: float | None = None,
+               ttl_steps: int | None = None) -> int:
+        """Enqueue one prompt; returns the request id.
+
+        ``deadline_s`` is a wall budget from now (engine clock);
+        ``ttl_steps`` a deterministic budget in scheduler steps —
+        whichever passes first expires the request to
+        DEADLINE_EXCEEDED with whatever tokens it has.  ``priority``
+        orders preemption victims (lower goes first)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
-        self.scheduler.submit(Request(rid, prompt, int(max_new_tokens)))
+        deadline_ns = (None if deadline_s is None
+                       else self._clock() + int(deadline_s * 1e9))
+        expire_step = (None if ttl_steps is None
+                       else self._sched_steps + int(ttl_steps))
+        self.scheduler.submit(Request(rid, prompt, int(max_new_tokens),
+                                      priority=int(priority),
+                                      deadline_ns=deadline_ns,
+                                      expire_step=expire_step))
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cooperative cancel: the request finishes TRUNCATED (partial
+        output) at the next step boundary.  False if rid is unknown."""
+        return self.scheduler.cancel(rid)
+
+    def preempt(self, rid: int) -> bool:
+        """Force-preempt a running request (the pressure path calls
+        this automatically; exposed for tests and the chaos harness).
+        Its tokens so far are preserved and it will be re-admitted —
+        through the prefix cache when one is attached — to finish with
+        byte-exact output and status PREEMPTED_RETRIED."""
+        for slot, r in self.scheduler.running.items():
+            if r.rid == rid:
+                self._preempt_slot(slot, self.obs.tracer)
+                return True
+        return False
+
+    def inject_logit_fault(self, rid: int,
+                           value: float = float("nan")) -> None:
+        """Chaos seam: add ``value`` to every logit ``rid``'s slot
+        produces from now on.  With ``nan_guard`` on, a non-finite
+        ``value`` fails exactly this request and no other."""
+        if not self.sc.nan_guard:
+            raise RuntimeError(
+                "inject_logit_fault needs PagedServeConfig(nan_guard="
+                "True): without the guard a poisoned slot would decode "
+                "garbage forever instead of failing fast")
+        for slot, r in self.scheduler.running.items():
+            if r.rid == rid:
+                self._poison = self._poison.at[slot].set(value)
+                self._poison_host[slot] = value
+                return
+        raise KeyError(f"rid {rid} is not running")
+
+    def shutdown(self) -> list[Request]:
+        """Cancel all in-flight work and drain to terminal statuses.
+
+        Frees every request-owned page (prefix-tree references are
+        dropped too, so the pool returns to empty) — the Ctrl-C path in
+        ``launch/serve``.  Returns the requests finished by the drain.
+        """
+        for r in list(self.scheduler.waiting):
+            r.cancelled = True
+        for r in self.scheduler.running.values():
+            r.cancelled = True
+        out = []
+        while self.has_work:
+            out.extend(self.step())
+        if self.prefix_cache is not None:
+            while len(self.prefix_cache):
+                if not self.prefix_cache.evict(len(self.prefix_cache)):
+                    break
+        return out
 
     @property
     def has_work(self) -> bool:
@@ -358,6 +466,21 @@ class PagedEngine:
                 "cached_pages": (len(self.prefix_cache)
                                  if self.prefix_cache is not None else 0)}
 
+    def lifecycle_stats(self) -> dict:
+        """Terminal-status counts plus the pressure/fault counters — a
+        thin view over the ``lifecycle.*`` / ``sched.*`` registry
+        entries (docs/robustness.md)."""
+        reg = self.obs.registry
+        out = {s.value: self._m_status[s].value for s in RequestStatus}
+        out["preemptions"] = reg.counter("sched.preemptions").value
+        out["admit_rollbacks"] = reg.counter("sched.admit_rollbacks").value
+        out["nan_guard_trips"] = self._m_nan_trips.value
+        if self.degrade is not None:
+            out["degrade_level"] = self.degrade.level
+            out["degrade_escalations"] = \
+                reg.counter("degrade.escalations").value
+        return out
+
     def step(self) -> list[Request]:
         """One continuous-batching iteration; returns finished requests
         (with ``.output`` filled).
@@ -382,6 +505,32 @@ class PagedEngine:
         return finished
 
     def _step_inner(self, sp, tr, step_rids: set[int]) -> list[Request]:
+        self._sched_steps += 1
+        now = self._clock()
+        finished: list[Request] = []
+        # lifecycle sweep: queued deadline/TTL expiry and cancellation
+        # drain before admission so a dead request never takes pages
+        for req in self.scheduler.expire(now, self._sched_steps):
+            self._finish(req, finished)
+        # degradation ladder: one control tick per step, applied to THIS
+        # step's spec/chunk/preemption decisions
+        decode_chunk = self.sc.decode_chunk
+        use_spec = self.spec
+        allow_preempt = self.sc.preempt
+        force_preempt = False
+        if self.degrade is not None:
+            self.degrade.update()
+            if self.degrade.spec_disabled:
+                use_spec = 0
+            if self.degrade.shrink_chunk:
+                decode_chunk = max(1, decode_chunk // 2)
+            if self.degrade.allow_preempt and self.sc.temperature <= 0:
+                allow_preempt = force_preempt = True
+        if allow_preempt:
+            victim = self.scheduler.preempt_candidate(force=force_preempt)
+            if victim is not None:
+                with sp("preempt", cat="sched"):
+                    self._preempt_slot(victim, tr)
         with sp("host_prep", cat="engine"):
             for req in self.scheduler.admit():
                 step_rids.add(req.rid)
@@ -432,28 +581,48 @@ class PagedEngine:
                         if tr is not None:
                             jax.block_until_ready(self._cur_tok)
                     req.prefilled = req.prompt_len
-                    self.scheduler.register_prefix(req)
-                    self.last_step_tokens += 1     # the prefill token
+                    if not req.failed:      # poisoned pages never cached
+                        self.scheduler.register_prefix(req)
+                        self.last_step_tokens += 1     # the prefill token
+        for req in self.scheduler.take_rejected():
+            self._finish(req, finished)
         with sp("plan_step", cat="sched"):
-            plan = self.scheduler.plan_step(self.sc.decode_chunk,
+            plan = self.scheduler.plan_step(decode_chunk,
                                             self.prefill_chunk or 1)
-        step_rids.update(self.scheduler.running[s].rid
-                         for s in plan.decode_slots + plan.prefill_slots)
+        # plan entries are validated and deduped before dispatch: a
+        # duplicated decode slot would double-count ``generated`` and a
+        # stale/dropped entry is simply skipped (the next plan recomputes
+        # from scheduler state, so nothing is lost) — chaos-harness seam
+        running = self.scheduler.running
+        decode_rs: list[Request] = []
+        seen: set[int] = set()
+        for s in plan.decode_slots:
+            r = running.get(s)
+            if r is None or s in seen or not r.decode_ready \
+                    or r.cancelled or r.expired(now, self._sched_steps):
+                continue            # dead slots stop decoding immediately
+            seen.add(s)
+            decode_rs.append(r)
+        step_rids.update(r.rid for r in decode_rs)
         # decode first: decode-ready slots are never stalled by prefill
-        if plan.decode_slots:
+        if decode_rs:
             with sp("dispatch.decode", cat="device"):
-                self._decode_once(
-                    [self.scheduler.running[s] for s in plan.decode_slots])
+                self._decode_once(decode_rs, decode_chunk, use_spec)
                 if tr is not None:
                     jax.block_until_ready(self._out_buf)
         for slot in plan.prefill_slots:
+            r = running.get(slot)
+            if r is None or r.prefill_done or r.cancelled \
+                    or r.expired(now, self._sched_steps):
+                continue
+            step_rids.add(r.rid)
             with sp("dispatch.prefill", cat="device"):
-                self._prefill_one_chunk(self.scheduler.running[slot])
+                self._prefill_one_chunk(r)
                 if tr is not None:
                     jax.block_until_ready(self._cur_tok)
-        finished = []
         done_slots = [s for s, r in self.scheduler.running.items()
-                      if r.done]
+                      if r.done or r.failed or r.cancelled
+                      or r.expired(now, self._sched_steps)]
         if done_slots:
             # one host transfer covers every request finishing this step;
             # device state is NOT reset — the decode fns mask unoccupied
@@ -462,20 +631,80 @@ class PagedEngine:
                 host_out = np.asarray(self._out_buf)
             for slot in done_slots:
                 req = self.scheduler.running[slot]
-                req.output = host_out[slot, :req.generated].copy()
-                finished.append(self.scheduler.evict(slot))
+                tail = host_out[slot, :req.generated].copy()
+                req.output = (tail if req.prior_tokens is None else
+                              np.concatenate([req.prior_tokens, tail]))
+                self._clear_poison(slot)
+                self._finish(self.scheduler.evict(slot), finished)
         return finished
 
-    def generate(self, prompts, n_tokens: int) -> np.ndarray:
+    def _finish(self, req: Request, out: list[Request]) -> None:
+        """Assign the terminal status (docs/robustness.md), count it,
+        and hand the request back.  Precedence: a tripped fault always
+        FAILs; a request that finished its budget is OK (or
+        PREEMPTED_RETRIED) even if a cancel/deadline raced the last
+        step; otherwise cancel beats deadline."""
+        if req.output is None:     # never ran: expired/rejected in queue
+            req.output = (req.prior_tokens if req.prior_tokens is not None
+                          else np.zeros(0, np.int32))
+        if req.failed:
+            status = RequestStatus.FAILED
+        elif req.done:
+            status = (RequestStatus.PREEMPTED_RETRIED if req.preempt_count
+                      else RequestStatus.OK)
+        elif req.cancelled:
+            status = RequestStatus.TRUNCATED
+        else:
+            status = RequestStatus.DEADLINE_EXCEEDED
+        req.status = status
+        self._m_status[status].inc()
+        out.append(req)
+
+    def _preempt_slot(self, slot: int, tr=None) -> None:
+        """Preempt one running slot: read back its sampled tokens (the
+        rare sync preemption pays), hand them to the scheduler — which
+        registers complete pages in the prefix tree and requeues the
+        replacement — and clear any injected poison with the slot."""
+        req = self.scheduler.running[slot]
+        host_out = np.asarray(self._out_buf)
+        emitted = host_out[slot, :req.generated].copy()
+        new = self.scheduler.preempt(slot, emitted)
+        self._clear_poison(slot)
+        if tr is not None:
+            tr.instant("preempt", cat="lifecycle",
+                       args={"rid": req.rid, "slot": slot,
+                             "kept_tokens": int(len(new.prior_tokens))})
+
+    def _clear_poison(self, slot: int) -> None:
+        if self._poison_host[slot]:
+            self._poison = self._poison.at[slot].set(0.0)
+            self._poison_host[slot] = 0.0
+
+    def generate(self, prompts, n_tokens: int, *, priorities=None,
+                 deadline_s: float | None = None,
+                 ttl_steps: int | None = None,
+                 return_requests: bool = False):
         """Batch convenience: submit all, run to completion, return
         (B, n_tokens) in submission order.  ``prompts`` may be a 2-D
-        array or a list of 1-D arrays (ragged lengths welcome)."""
-        rids = [self.submit(p, n_tokens) for p in prompts]
-        done: dict[int, np.ndarray] = {}
+        array or a list of 1-D arrays (ragged lengths welcome).
+
+        With ``return_requests=True`` the finished
+        :class:`~repro.serve.scheduler.Request` objects come back
+        instead (``.output`` + terminal ``.status``, submission order)
+        — the only safe form when deadlines/TTLs/faults can truncate
+        outputs to ragged lengths."""
+        pr = (list(priorities) if priorities is not None
+              else [0] * len(prompts))
+        rids = [self.submit(p, n_tokens, priority=q, deadline_s=deadline_s,
+                            ttl_steps=ttl_steps)
+                for p, q in zip(prompts, pr)]
+        done: dict[int, Request] = {}
         while self.has_work:
             for req in self.step():
-                done[req.rid] = req.output
-        return np.stack([done[r] for r in rids])
+                done[req.rid] = req
+        if return_requests:
+            return [done[r] for r in rids]
+        return np.stack([done[r].output for r in rids])
 
     # -- internals ------------------------------------------------------------
 
@@ -505,13 +734,23 @@ class PagedEngine:
         # the scope tag carries the jit variant (one trace per bucket),
         # so resolution bytes x execution count attributes correctly
         with self.obs.dram.scope(f"join[{bucket}]"):
-            (self.cache, self._lengths, self._cur_tok, self._out_buf,
-             self._hist) = self._get_join(bucket)(
+            res = self._get_join(bucket)(
                 self.params, self.cache, jnp.asarray(prompt),
                 jnp.int32(L), jnp.int32(slot), jnp.asarray(pages),
                 self._lengths, self._cur_tok, self._out_buf, self._hist,
-                self._next_key())
-        self._m_prefill_tokens.inc(L)
+                self._next_key(), self._poison)
+        if self.sc.nan_guard:
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist, bad) = res
+            self._m_prefill_tokens.inc(L)
+            if bool(np.asarray(bad)):
+                req.failed = True
+                self._m_nan_trips.inc()
+                return
+        else:
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist) = res
+            self._m_prefill_tokens.inc(L)
         req.generated = 1
 
     def _get_join(self, bucket: int):
@@ -519,20 +758,26 @@ class PagedEngine:
             cfg, sc = self.cfg, self.sc
 
             def join(params, cache, prompt, true_len, slot, pages,
-                     lengths, cur_tok, out_buf, hist, key):
+                     lengths, cur_tok, out_buf, hist, key, poison):
                 with ops.fused_ops(sc.fuse):
                     logits, dense = T.prefill(cfg, params, prompt,
                                               max_seq=bucket, full_kv=True,
                                               logits_at=true_len - 1)
                 cache = KV.write_prefill(cfg, cache, dense, slot, pages,
                                          self.page_size)
+                if sc.nan_guard:
+                    logits = logits + poison[slot]
                 tok = sample_tokens(cfg, logits, sc.temperature, key)[0]
                 hist = jax.lax.dynamic_update_slice(
                     hist, prompt, (slot, jnp.int32(0)))
                 hist = hist.at[slot, true_len].set(tok, mode="drop")
-                return (cache, lengths.at[slot].set(true_len),
-                        cur_tok.at[slot].set(tok),
-                        out_buf.at[slot, 0].set(tok), hist)
+                out = (cache, lengths.at[slot].set(true_len),
+                       cur_tok.at[slot].set(tok),
+                       out_buf.at[slot, 0].set(tok), hist)
+                if sc.nan_guard:
+                    bad = ~jnp.all(jnp.isfinite(logits[..., :cfg.vocab]))
+                    return out + (bad,)
+                return out
 
             self._joins[bucket] = jax.jit(join)
         return self._joins[bucket]
@@ -586,15 +831,27 @@ class PagedEngine:
         tokens[0, :c_real] = req.prompt[start:start + c_real]
         take_at = (L - 1 - start) if final else -1
         with self.obs.dram.scope(f"prefill[{C}]"):
-            (self.cache, self._lengths, self._cur_tok, self._out_buf,
-             self._hist) = self._get_chunk_fn(C)(
+            res = self._get_chunk_fn(C)(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.int32(start), self._block_tables,
                 self._lengths, jnp.int32(req.slot),
                 jnp.int32(start + c_real), jnp.int32(take_at),
-                self._cur_tok, self._out_buf, self._hist, self._next_key())
-        self._m_prefill_tokens.inc(c_real)
-        req.prefilled = start + c_real
+                self._cur_tok, self._out_buf, self._hist, self._next_key(),
+                self._poison)
+        if self.sc.nan_guard:
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist, bad) = res
+            self._m_prefill_tokens.inc(c_real)
+            req.prefilled = start + c_real
+            if bool(np.asarray(bad)):   # guard sync: one scalar per chunk
+                req.failed = True
+                self._m_nan_trips.inc()
+                return
+        else:
+            (self.cache, self._lengths, self._cur_tok, self._out_buf,
+             self._hist) = res
+            self._m_prefill_tokens.inc(c_real)
+            req.prefilled = start + c_real
         if final:
             req.generated = 1
             self.scheduler.register_prefix(req)
@@ -605,7 +862,8 @@ class PagedEngine:
             cfg, sc = self.cfg, self.sc
 
             def chunk(params, cache, tokens, start, block_tables, lengths,
-                      slot, new_len, take_at, cur_tok, out_buf, hist, key):
+                      slot, new_len, take_at, cur_tok, out_buf, hist, key,
+                      poison):
                 bt_row = jax.lax.dynamic_slice_in_dim(block_tables,
                                                       slot, 1)
                 with ops.fused_ops(sc.fuse):
@@ -615,6 +873,8 @@ class PagedEngine:
                     logits, cache = T.decode_step(
                         cfg, params, tokens, cache,
                         jnp.full((1,), start, jnp.int32), attn_step=attn)
+                if sc.nan_guard:
+                    logits = logits + poison[slot]
                 lengths = lengths.at[slot].set(new_len)
                 idx = start + jnp.arange(C)
                 hist = hist.at[slot, jnp.where(idx < sc.max_seq, idx,
@@ -632,6 +892,9 @@ class PagedEngine:
                 hist = hist.at[slot, new_len].set(
                     jnp.where(is_final, tok, hist[slot, new_len]),
                     mode="drop")
+                if sc.nan_guard:
+                    bad = ~jnp.all(jnp.isfinite(logits[..., :cfg.vocab]))
+                    return cache, lengths, cur_tok, out_buf, hist, bad
                 return cache, lengths, cur_tok, out_buf, hist
 
             self._chunk_fns[C] = jax.jit(chunk)
@@ -640,18 +903,26 @@ class PagedEngine:
     # -- decode ---------------------------------------------------------------
 
     def _decode_fn(self, params, cache, cur_tok, block_tables, lengths,
-                   occupied, remaining, out_idx, out_buf, key, *,
+                   occupied, remaining, out_idx, out_buf, key, poison, *,
                    chunk: int):
         """``chunk`` fused decode steps (one device dispatch).
 
-        ``remaining[b]`` is the slot's token budget at chunk start; step
-        ``i`` is active for slot b iff ``occupied[b] and i <
-        remaining[b]``.  Inactive slots freeze their length, token and
-        output row, and their block-table rows / lengths are masked to
-        scratch/0 *here, inside the jit* — so eviction never has to
-        reset device state (a stale row is harmless) and freeing a
-        request costs zero device dispatches."""
+        ``remaining[b]`` is the slot's token budget at chunk start; a
+        step is active for slot b while ``occupied[b]`` and its emitted
+        count is under budget.  Inactive slots freeze their length,
+        token and output row, and their block-table rows / lengths are
+        masked to scratch/0 *here, inside the jit* — so eviction never
+        has to reset device state (a stale row is harmless) and freeing
+        a request costs zero device dispatches.
+
+        With ``nan_guard`` on, ``poison`` (the chaos seam) is added to
+        the logits and any slot producing a non-finite logit is frozen
+        for the rest of the chunk — its sampled-so-far output stays
+        intact — and reported in a per-slot ``(emitted, bad)`` stats
+        array the host reads back once per chunk.  Guard off: no stats
+        output, no readback, the hot path stays async."""
         cfg = self.cfg
+        guard = self.sc.nan_guard
         lengths_in = lengths
         block_tables = jnp.where(occupied[:, None], block_tables,
                                  KV.SCRATCH_PAGE)
@@ -663,10 +934,16 @@ class PagedEngine:
         rows = jnp.arange(cur_tok.shape[0])
 
         def body(carry, i):
-            cur_tok, cache, lengths, out_idx, out_buf = carry
-            active = occupied & (i < remaining)
+            cur_tok, cache, lengths, out_idx, out_buf, emitted, bad = carry
+            active = occupied & (emitted < remaining) & ~bad
             logits, cache = T.decode_step(cfg, params, cur_tok, cache,
                                           lengths, attn_step=attn)
+            if guard:
+                logits = logits + poison[:, None]
+                finite = jnp.all(jnp.isfinite(logits[:, :cfg.vocab]),
+                                 axis=-1)
+                bad = bad | (active & ~finite)
+                active = active & finite
             tok = sample_tokens(cfg, logits, self.sc.temperature,
                                 jax.random.fold_in(key, i))
             tok = jnp.where(active, tok, cur_tok)
@@ -675,19 +952,26 @@ class PagedEngine:
                 jnp.where(active, tok, keep))
             out_idx = jnp.where(active, out_idx + 1, out_idx)
             lengths = jnp.where(active, lengths + 1, lengths)
-            return (tok, cache, lengths, out_idx, out_buf), None
+            emitted = emitted + active.astype(jnp.int32)
+            return (tok, cache, lengths, out_idx, out_buf, emitted,
+                    bad), None
 
         with ops.fused_ops(self.sc.fuse):
-            (cur_tok, cache, lengths, _, out_buf), _ = jax.lax.scan(
-                body, (cur_tok, cache, lengths, out_idx, out_buf),
-                jnp.arange(chunk))
+            carry = (cur_tok, cache, lengths, out_idx, out_buf,
+                     jnp.zeros_like(remaining),
+                     jnp.zeros(cur_tok.shape[0], bool))
+            (cur_tok, cache, lengths, _, out_buf, emitted,
+             bad), _ = jax.lax.scan(body, carry, jnp.arange(chunk))
         # restore masked-out lengths (a still-prefilling slot keeps its)
-        return (cur_tok, cache,
-                jnp.where(occupied, lengths, lengths_in), out_buf)
+        out = (cur_tok, cache,
+               jnp.where(occupied, lengths, lengths_in), out_buf)
+        if guard:
+            return out + (jnp.stack([emitted, bad.astype(jnp.int32)]),)
+        return out
 
     def _decode_spec_fn(self, params, cache, cur_tok, block_tables,
                         lengths, occupied, remaining, out_idx, out_buf,
-                        hist, *, chunk: int):
+                        hist, poison, *, chunk: int):
         """``chunk`` draft-verify steps (one device dispatch).
 
         Each step drafts ``k = spec_decode`` tokens by n-gram lookup
@@ -736,15 +1020,26 @@ class PagedEngine:
             d = hist[rows[:, None], jnp.clip(gidx, 0, max_seq - 1)]
             return jnp.where(valid, d, -1)
 
+        guard = self.sc.nan_guard
+
         def body(carry, i):
             (cur_tok, cache, lengths, out_idx, out_buf, hist, emitted,
-             calls) = carry
-            active = occupied & (emitted < remaining)
+             calls, bad) = carry
+            active = occupied & (emitted < remaining) & ~bad
             d = drafts_for(hist, lengths)
             feed = jnp.concatenate(
                 [cur_tok[:, None], jnp.maximum(d, 0)], axis=1)
             logits, cache = T.decode_step(cfg, params, feed, cache,
                                           lengths, attn_step=attn)
+            if guard:
+                # any non-finite logit in the slot's span freezes the
+                # whole verify step for that slot (emits nothing): a
+                # poisoned draft chain must never be accepted
+                logits = logits + poison[:, None, None]
+                finite = jnp.all(jnp.isfinite(logits[..., :cfg.vocab]),
+                                 axis=(1, 2))
+                bad = bad | (active & ~finite)
+                active = active & finite
             a = jnp.argmax(logits[..., :cfg.vocab],
                            axis=-1).astype(jnp.int32)         # (B, span)
             prefix = jnp.cumprod((d == a[:, :k]).astype(jnp.int32), axis=1)
@@ -762,17 +1057,27 @@ class PagedEngine:
             cur_tok = jnp.where(active, new_cur, cur_tok)
             return (cur_tok, cache, lengths + n_emit, out_idx + n_emit,
                     out_buf, hist, emitted + n_emit,
-                    calls + jnp.sum(active.astype(jnp.int32))), None
+                    calls + jnp.sum(active.astype(jnp.int32)), bad), None
 
         with ops.fused_ops(self.sc.fuse):
             carry = (cur_tok, cache, lengths, out_idx, out_buf, hist,
-                     jnp.zeros(b, jnp.int32), jnp.int32(0))
+                     jnp.zeros(b, jnp.int32), jnp.int32(0),
+                     jnp.zeros(b, bool))
             (cur_tok, cache, lengths, _, out_buf, hist, emitted,
-             calls), _ = jax.lax.scan(body, carry, jnp.arange(chunk))
-        return (cur_tok, cache, jnp.where(occupied, lengths, lengths_in),
-                out_buf, hist, emitted, calls)
+             calls, bad), _ = jax.lax.scan(body, carry, jnp.arange(chunk))
+        out = (cur_tok, cache, jnp.where(occupied, lengths, lengths_in),
+               out_buf, hist, emitted, calls)
+        if guard:
+            return out + (bad.astype(jnp.int32),)
+        return out
 
-    def _decode_once(self, running: list[Request]) -> None:
+    def _decode_once(self, running: list[Request],
+                     decode_chunk: int | None = None,
+                     use_spec: int | None = None) -> None:
+        decode_chunk = (self.sc.decode_chunk if decode_chunk is None
+                        else decode_chunk)
+        use_spec = self.spec if use_spec is None else use_spec
+        guard = self.sc.nan_guard
         occupied = np.zeros(self.sc.max_batch, bool)
         remaining = np.zeros(self.sc.max_batch, np.int32)
         out_idx = np.zeros(self.sc.max_batch, np.int32)
@@ -785,8 +1090,8 @@ class PagedEngine:
         # once per distinct remaining-budget value (masking keeps any
         # over-length steps result-invariant)
         chunk = 1 << (int(remaining.max()) - 1).bit_length()
-        chunk = int(min(self.sc.decode_chunk, chunk))
-        if self.spec:
+        chunk = int(min(decode_chunk, chunk))
+        if use_spec:
             # each verify call emits 1..spec+1 tokens; size the scan for
             # the token budget at full acceptance — zero acceptance just
             # spreads a slot's budget over more scheduler visits instead
@@ -794,29 +1099,47 @@ class PagedEngine:
             iters = -(-chunk // (self.spec + 1))
             with self.obs.dram.scope(f"spec_decode[{iters}]"):
                 (self._cur_tok, self.cache, self._lengths, self._out_buf,
-                 self._hist, emitted, calls) = self._decode_spec(
+                 self._hist, emitted, calls, *badv) = self._decode_spec(
                     self.params, self.cache, self._cur_tok,
                     self._block_tables, self._lengths,
                     jnp.asarray(occupied), jnp.asarray(remaining),
                     jnp.asarray(out_idx), self._out_buf, self._hist,
-                    chunk=iters)
+                    self._poison, chunk=iters)
             # the one per-step readback: how far each slot actually got
             emitted = np.asarray(emitted)
+            bad = np.asarray(badv[0]).astype(bool) if guard else None
             for r in running:
                 n = int(emitted[r.slot])
                 r.generated += n
                 self.last_step_tokens += n
+                if guard and bad[r.slot]:
+                    r.failed = True
+                    self._m_nan_trips.inc()
             self._m_spec_calls.inc(int(calls))
             self._m_spec_tokens.inc(int(emitted.sum()))
             self._m_decode_tokens.inc(int(emitted.sum()))
             return
         with self.obs.dram.scope(f"decode[{chunk}]"):
-            (self._cur_tok, self.cache, self._lengths,
-             self._out_buf) = self._decode(
+            res = self._decode(
                 self.params, self.cache, self._cur_tok, self._block_tables,
                 self._lengths, jnp.asarray(occupied),
                 jnp.asarray(remaining), jnp.asarray(out_idx),
-                self._out_buf, self._next_key(), chunk=chunk)
+                self._out_buf, self._next_key(), self._poison, chunk=chunk)
+        if guard:
+            (self._cur_tok, self.cache, self._lengths, self._out_buf,
+             stats) = res
+            stats = np.asarray(stats)   # the guard's per-chunk readback
+            emitted, bad = stats[0], stats[1].astype(bool)
+            for r in running:
+                n = int(emitted[r.slot])
+                r.generated += n
+                self.last_step_tokens += n
+                self._m_decode_tokens.inc(n)
+                if bad[r.slot]:
+                    r.failed = True
+                    self._m_nan_trips.inc()
+            return
+        (self._cur_tok, self.cache, self._lengths, self._out_buf) = res
         for r in running:
             steps = min(chunk, r.max_new_tokens - r.generated)
             r.generated += steps

@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import warnings
 
 from repro.tune.schedule import OpSpec, Schedule
 
@@ -54,11 +55,32 @@ class ScheduleCache:
 
     # -- IO -------------------------------------------------------------------
 
+    def _quarantine(self, why: str) -> None:
+        """Move the unreadable file aside to ``<path>.corrupt`` so the
+        next flush rebuilds a clean cache without destroying the
+        evidence (a second corrupt file overwrites the first — the
+        newest specimen is the one worth inspecting)."""
+        quarantined = self.path + ".corrupt"
+        try:
+            os.replace(self.path, quarantined)
+        except OSError:
+            return              # raced away or unwritable dir: nothing to do
+        warnings.warn(
+            f"schedule cache {self.path} is corrupt ({why}); quarantined "
+            f"to {quarantined} and rebuilding — retune with "
+            f"`python -m repro.tune` to repopulate")
+
     def _read_file(self) -> dict[str, Schedule]:
         try:
             with open(self.path) as f:
                 raw = json.load(f)
-        except (OSError, json.JSONDecodeError):
+        except OSError:
+            return {}           # no cache yet: cold start, not corruption
+        except json.JSONDecodeError as e:
+            self._quarantine(f"invalid JSON: {e}")
+            return {}
+        if not isinstance(raw, dict):
+            self._quarantine(f"expected an object, got {type(raw).__name__}")
             return {}
         if raw.get("version") != SCHEMA_VERSION:
             return {}

@@ -1,0 +1,105 @@
+"""Chaos harness (docs/robustness.md): injector units plus the
+randomized fault schedules from ``repro.chaos.runner`` — the tier-1
+home of the acceptance bar ``python -m repro.chaos --schedules 200``
+(zero page leaks, every request terminal, survivors byte-exact)."""
+
+import numpy as np
+import pytest
+
+from repro.chaos import FlakyAllocator, PlanChaos, run_schedules
+from repro.chaos.runner import oracle
+from repro.serve import kv_cache as KV
+from repro.serve.scheduler import Request, Scheduler
+
+
+# -- injector units ----------------------------------------------------------
+
+
+def test_oracle_streams_compose():
+    """The stand-in for greedy decode must be a pure function of
+    (rid, position): splitting a stream cannot change it."""
+    whole = oracle(5, 0, 10)
+    split = np.concatenate([oracle(5, 0, 4), oracle(5, 4, 10)])
+    np.testing.assert_array_equal(whole, split)
+    assert not np.array_equal(oracle(5, 0, 10), oracle(6, 0, 10))
+
+
+def test_flaky_allocator_lie_triggers_rollback():
+    """An alloc that reneges mid-admission must roll back completely:
+    zero leaked pages, the request still queued, and the very next
+    round admits it."""
+    alloc = FlakyAllocator(6, np.random.default_rng(0))
+    sched = Scheduler(2, 2, alloc, 8)
+    sched.submit(Request(0, np.zeros(3, np.int32), 2))
+    alloc.fail_next = 1
+    assert sched.admit() == []
+    assert alloc.lies == 1
+    assert alloc.in_use() == 0, "rollback leaked pages"
+    assert sched._m_rollbacks.value == 1
+    assert [r.rid for r in sched.waiting] == [0]
+    assert [r.rid for r in sched.admit()] == [0]
+
+
+def test_flaky_allocator_hostages_really_hold_pages():
+    alloc = FlakyAllocator(6, np.random.default_rng(0))
+    assert alloc.take_hostages(3) == 3
+    assert alloc.in_use() == 3 and len(alloc.hostages) == 3
+    assert alloc.take_hostages(99) == 2          # pool runs dry first
+    assert alloc.release_hostages() == 5
+    assert alloc.in_use() == 0 and not alloc.hostages
+    assert alloc.available() == alloc.capacity
+
+
+def test_plan_chaos_duplicates_and_drops():
+    alloc = KV.PageAllocator(8)
+    sched = Scheduler(2, 2, alloc, 8)
+    for rid in range(2):
+        sched.submit(Request(rid, np.zeros(2, np.int32), 4))
+    assert len(sched.admit()) == 2
+    for r in sched.running.values():             # force decode-ready
+        r.prefilled = r.prompt_len
+        r.generated = 1
+    dup = PlanChaos(sched, np.random.default_rng(0), dup_rate=1.0)
+    plan = dup.plan_step(2, 2)
+    assert dup.dups == 2 and len(plan.decode_slots) == 4
+    drop = PlanChaos(sched, np.random.default_rng(0), drop_rate=1.0)
+    plan = drop.plan_step(2, 2)
+    assert drop.drops == 2 and plan.decode_slots == []
+
+
+# -- randomized schedules ----------------------------------------------------
+
+
+def test_chaos_schedules_fast_batch():
+    """A CI-sized batch of randomized fault schedules; every schedule
+    asserts the full invariant set internally, and the batch must not
+    be vacuously clean — each injector has to have fired."""
+    stats = run_schedules(30, seed=1000)
+    assert stats["schedules"] == 30
+    for arm in ("lies", "preempts", "cancels", "dups", "drops",
+                "hostage_rounds", "rollbacks"):
+        assert stats[arm] > 0, f"fault arm {arm!r} never fired"
+
+
+@pytest.mark.slow
+def test_chaos_schedules_acceptance_bar():
+    """The ISSUE acceptance criterion: 200 randomized fault schedules
+    with zero page leaks, every request terminal, and survivors
+    byte-exact (asserted inside each schedule)."""
+    stats = run_schedules(200, seed=0)
+    assert stats["schedules"] == 200
+    for arm in ("lies", "preempts", "cancels", "ttl", "dups", "drops",
+                "hostage_rounds", "rejected", "rollbacks"):
+        assert stats[arm] > 0, f"fault arm {arm!r} never fired"
+
+
+@pytest.mark.slow
+def test_engine_chaos_smoke():
+    """The real-engine schedule from ``repro.chaos --smoke``: NaN
+    poisoning, forced preemption, TTL expiry and a clean survivor in
+    one run, differential against the fault-free engine."""
+    from repro.chaos.runner import engine_smoke
+    out = engine_smoke(seed=0)
+    assert out["nan_trips"] >= 1
+    assert "failed" in out["statuses"].values()
+    assert "preempted_retried" in out["statuses"].values()

@@ -27,6 +27,13 @@ Two layers:
   the tree, and nothing leaks once the tree itself is dropped.  The
   engine-level differential tests then prove ``prefix_cache=True``
   generates byte-identical tokens to the unshared engine.
+
+* **Preemption with restore** — a third simulation layer gives the sim
+  deterministic per-(rid, position) emitted tokens, so random
+  preempt-at-step-k schedules can assert the restored stream is
+  byte-identical to the unpreempted run; the engine-level differential
+  proves the same bar with device tokens across the arch families
+  (docs/robustness.md).
 """
 
 import dataclasses
@@ -275,8 +282,16 @@ class _SimPrefix(_Sim):
                 f"write to cached page {page}"
             assert self.alloc.refcount(page) == 1, \
                 f"write to shared page {page}"
-            tok = int(r.prompt[pos]) if pos < r.prompt_len else -(r.rid + 1)
+            tok = int(r.prompt[pos]) if pos < r.prompt_len \
+                else self._gen_tok(r, pos)
             self.contents.setdefault(page, [None] * p)[pos % p] = tok
+
+    def _gen_tok(self, r, pos):
+        """Simulated sampled token for generated position ``pos``."""
+        return -(r.rid + 1)
+
+    def _on_finish(self, req):
+        self.finished_rids.append(req.rid)
 
     def step(self):
         p = self.sched.page_size
@@ -320,7 +335,7 @@ class _SimPrefix(_Sim):
                     self._write(r, r.prompt_len, r.prompt_len + 1)
                 self.sched.register_prefix(r)   # mirror the engine hook
         for s in [s for s, r in self.sched.running.items() if r.done]:
-            self.finished_rids.append(self.sched.evict(s).rid)
+            self._on_finish(self.sched.evict(s))
         self.check_pages()
 
     def check_pages(self):
@@ -455,6 +470,163 @@ def test_prefix_sharing_invariants_property():
             if data.draw(st.booleans()):
                 sim.step()
         sim.drain(max_steps=80 * max(rid, 1))
+        assert sorted(sim.finished_rids) == list(range(rid))
+
+    run()
+
+
+# ===================== preemption-with-restore simulation ===================
+
+
+class _SimPreempt(_SimPrefix):
+    """_SimPrefix plus preempt-with-restore (docs/robustness.md).
+
+    Generated tokens become a deterministic function of
+    (rid, emission index) — the sim's stand-in for greedy decode of a
+    fixed model — so a restored request's full emitted stream can be
+    checked byte-identical to what the unpreempted run would produce.
+    Restore bookkeeping (prompt extension, budget telescoping,
+    re-admission through the tree) is the only thing that can break the
+    identity, which is exactly what the property is after.  The
+    engine-level differential with device tokens is
+    ``test_preempt_restore_token_exact`` below.
+    """
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.n_preempts = 0
+
+    def _gen_tok(self, r, pos):
+        # emission index counts from the ORIGINAL prompt end — restored
+        # prompts carry the prior emissions, so ``pos`` keeps advancing
+        # through the same per-rid stream across preemptions
+        return -int((r.rid * 1009 + (pos - r.orig_prompt_len) * 31 + 7)
+                    % 97) - 1
+
+    def preempt_now(self, rng) -> bool:
+        """Preempt a random running request with budget left; assert
+        the restore identity on the replacement."""
+        cands = [(s, r) for s, r in self.sched.running.items()
+                 if r.max_new_tokens - r.generated > 0]
+        if not cands:
+            return False
+        slot, victim = cands[int(rng.integers(len(cands)))]
+        emitted = np.array([self._gen_tok(victim, victim.prompt_len + j)
+                            for j in range(victim.generated)], np.int32)
+        plen, rid, count = victim.prompt_len, victim.rid, \
+            victim.preempt_count
+        new = self.sched.preempt(slot, emitted)
+        assert new.rid == rid
+        assert np.array_equal(new.prompt[plen:], emitted)
+        # the budget telescopes back to the original request's
+        assert new.prompt_len + new.max_new_tokens == \
+            new.orig_prompt_len + new.orig_max_new
+        assert new.preempt_count == count + 1
+        self.admitted_rids.remove(rid)   # re-admission is legal now
+        self.n_preempts += 1
+        self.check_pages()
+        return True
+
+    def _on_finish(self, req):
+        super()._on_finish(req)
+        assert req.done, "sim requests only finish by exhausting budget"
+        got = [int(t) for t in req.prompt[req.orig_prompt_len:]] + \
+              [self._gen_tok(req, req.prompt_len + j)
+               for j in range(req.generated)]
+        want = [self._gen_tok(req, req.orig_prompt_len + j)
+                for j in range(req.orig_max_new)]
+        assert got == want, (
+            f"rid {req.rid}: restored stream diverged after "
+            f"{req.preempt_count} preemption(s)")
+
+
+def _preempt_trace(rng, n_requests=12, max_batch=3, page_size=4,
+                   n_pages=16, max_seq=24, **kw):
+    sim = _SimPreempt(max_batch, page_size, n_pages, max_seq, **kw)
+    pool = [rng.integers(0, 97, (page_size * int(k),)).astype(np.int32)
+            for k in (1, 2, 2)]
+    rid = 0
+    for _ in range(n_requests):
+        pre = pool[int(rng.integers(len(pool)))]
+        tail = rng.integers(0, 97, (int(rng.integers(0, page_size)),))
+        prompt = np.concatenate([pre, tail.astype(np.int32)])
+        n = int(rng.integers(1, max_seq - len(prompt) + 1))
+        sim.submit_tokens(rid, prompt, n)
+        rid += 1
+        if rng.random() < 0.7:
+            sim.step()
+        if rng.random() < 0.4:
+            sim.preempt_now(rng)
+    steps = 0
+    while sim.sched.has_work:
+        sim.step()
+        steps += 1
+        # keep preempting during the drain (bounded, so it still ends)
+        if sim.n_preempts < 3 * n_requests and rng.random() < 0.25:
+            sim.preempt_now(rng)
+        assert steps <= 80 * n_requests, "preempt trace failed to drain"
+    sim.drain(max_steps=1)              # leak checks + tree drop
+    assert sorted(sim.finished_rids) == list(range(rid))
+    return sim
+
+
+def test_preempt_restore_trace_deterministic():
+    """Random preempt/restore traces under fixed seeds: every finished
+    request's emitted stream is byte-identical to the unpreempted run
+    (asserted at eviction), refcounts/leaks/liveness all hold, and the
+    seeds actually preempt."""
+    preempts = 0
+    for seed in range(8):
+        preempts += _preempt_trace(np.random.default_rng(seed)).n_preempts
+    assert preempts > 0, "no trace ever preempted"
+
+
+def test_preempt_restore_invariants_property():
+    """Hypothesis: ANY preempt-at-step-k/restore schedule yields
+    emitted streams byte-identical to the unpreempted run, with the
+    sharing invariants intact (sim-level; the per-arch engine
+    differential is test_preempt_restore_token_exact)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def run(data):
+        page_size = data.draw(st.sampled_from([2, 4]))
+        # capacity must cover one max_seq request (8 pages + scratch)
+        n_pages = data.draw(st.integers(9, 16))
+        max_batch = data.draw(st.integers(1, 3))
+        max_seq = page_size * 8
+        sim = _SimPreempt(max_batch, page_size, n_pages, max_seq,
+                          age_limit=data.draw(st.integers(2, 5)))
+        # hypothesis draws the structure; numpy supplies the unbounded
+        # in-loop randomness from a drawn seed (keeps examples small)
+        rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+        pool = [rng.integers(0, 97, (page_size * k,)).astype(np.int32)
+                for k in (1, 2)]
+        rid = 0
+        for _ in range(data.draw(st.integers(1, 8))):
+            pre = pool[int(rng.integers(len(pool)))]
+            tail = rng.integers(0, 97,
+                                (int(rng.integers(0, page_size)),))
+            prompt = np.concatenate([pre, tail.astype(np.int32)])
+            if len(prompt) >= max_seq:
+                prompt = prompt[:max_seq - 1]
+            n = int(rng.integers(1, max_seq - len(prompt) + 1))
+            sim.submit_tokens(rid, prompt, n)
+            rid += 1
+            if data.draw(st.booleans()):
+                sim.step()
+            if data.draw(st.booleans()):
+                sim.preempt_now(rng)
+        steps = 0
+        while sim.sched.has_work:
+            sim.step()
+            steps += 1
+            if sim.n_preempts < 24 and rng.random() < 0.25:
+                sim.preempt_now(rng)
+            assert steps <= 100 * max(rid, 1), "failed to drain"
+        sim.drain(max_steps=1)
         assert sorted(sim.finished_rids) == list(range(rid))
 
     run()
@@ -624,6 +796,51 @@ def test_prefix_cache_token_exact_fp8kv():
     out, _ = _generate(cfg, params, prompts, prefill_chunk=8,
                        prefix_cache=True)
     np.testing.assert_array_equal(ref, out)
+
+
+# ===================== token exactness: preempt + restore ===================
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_preempt_restore_token_exact(arch):
+    """Forced preempt-at-step-k + restore == the undisturbed run, byte
+    for byte, across the arch families.  With the prefix cache the
+    attention stacks replay only the victim's unshared tail; hybrid
+    stacks gate the cache off, replay in full, and must still agree
+    (docs/robustness.md)."""
+    from repro.serve.lifecycle import RequestStatus
+    cfg = _cfg(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(11))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (11, 7, 14)]
+    ref, _ = _generate(cfg, params, prompts, gen=10)
+    eng = PagedEngine(cfg, params, PagedServeConfig(
+        max_seq=64, max_batch=2, page_size=8, decode_chunk=4,
+        preempt=True, prefix_cache=True))
+    for k in (1, 2, 3):
+        rids = [eng.submit(p, 10) for p in prompts]
+        done: dict[int, Request] = {}
+        steps, target = 0, None
+        while eng.has_work:
+            steps += 1
+            for r in eng.step():
+                done[r.rid] = r
+            if steps >= k and target is None:
+                cands = [r for r in eng.scheduler.running.values()
+                         if r.max_new_tokens - r.generated > 0]
+                if cands:
+                    target = max(cands, key=lambda r: r.rid).rid
+                    assert eng.preempt(target)
+            assert steps < 300, "preempt schedule failed to drain"
+        assert target is not None, "no preemption candidate ever ran"
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(done[rid].output, ref[i])
+        assert done[target].status is RequestStatus.PREEMPTED_RETRIED
+        assert done[target].preempt_count >= 1
+        assert eng.scheduler.allocator.in_use() == \
+            (len(eng.prefix_cache) if eng.prefix_caching else 0), \
+            "pages leaked past the prefix tree"
 
 
 # ===================== prefix cache unit properties =========================

@@ -56,9 +56,38 @@ def test_cache_survives_corrupt_file(tmp_path):
     path.write_text("{not json")
     cache = ScheduleCache(str(path))
     spec = OpSpec("conv2d", (8, 8, 4, 8, 3, 3))
-    assert cache.lookup(spec, device="cpu") is None
+    with pytest.warns(UserWarning, match="quarantin"):
+        assert cache.lookup(spec, device="cpu") is None
     cache.store(Schedule(spec, (8, 8, 4, 8)), device="cpu")
     assert json.loads(path.read_text())["version"] == 1
+
+
+def test_cache_quarantines_corrupt_file(tmp_path):
+    """A corrupt cache file must not abort startup: it is moved aside
+    to ``<path>.corrupt`` (evidence preserved for the operator), a
+    warning names it, and the cache rebuilds cleanly in its place
+    (docs/robustness.md)."""
+    path = tmp_path / "schedules.json"
+    spec = OpSpec("conv2d", (8, 8, 4, 8, 3, 3))
+    path.write_text("{truncated by a crashed writ")
+    with pytest.warns(UserWarning, match="quarantin"):
+        assert ScheduleCache(str(path)).lookup(spec, device="cpu") is None
+    corrupt = tmp_path / "schedules.json.corrupt"
+    assert corrupt.read_text() == "{truncated by a crashed writ"
+    assert not path.exists()
+    # the rebuilt cache round-trips where the corrupt file stood
+    cache = ScheduleCache(str(path))
+    cache.store(Schedule(spec, (8, 8, 4, 8)), device="cpu")
+    assert ScheduleCache(str(path)).lookup(spec, device="cpu") is not None
+    # a well-formed but non-dict document quarantines the same way
+    # (overwriting the previous quarantine: latest evidence wins)
+    path2 = tmp_path / "other.json"
+    path2.write_text("[1, 2, 3]")
+    with pytest.warns(UserWarning, match="quarantin"):
+        assert ScheduleCache(str(path2)).lookup(spec, device="cpu") is None
+    assert (tmp_path / "other.json.corrupt").exists()
+    # a missing file is a cold start, not corruption: no warning
+    ScheduleCache(str(tmp_path / "absent.json")).lookup(spec, device="cpu")
 
 
 # -- lowering --------------------------------------------------------------
